@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks + TPU-projected derivations.
+
+CPU wall times here time the *oracle* ring path (the interpret-mode Pallas
+kernel is a correctness vehicle, not a perf number); the derived column is
+the TPU v5e projection from the limb-decomposition arithmetic:
+general ring matmul = 10 int8 MXU passes, binary-weight = 4, binary×binary
+= 1 (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+V5E_INT8_OPS = 394e12  # int8 MXU ops/s (2× bf16 peak)
+
+
+def _t(fn, *args, iters=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def kernels():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    m = k = n = 512
+    a = jax.random.bits(key, (m, k), jnp.uint32)
+    b = jax.random.bits(jax.random.fold_in(key, 1), (k, n), jnp.uint32)
+    w8 = (jax.random.randint(key, (k, n), 0, 2) * 2 - 1).astype(jnp.int8)
+    a8 = (jax.random.randint(key, (m, k), 0, 2) * 2 - 1).astype(jnp.int8)
+
+    macs = 2 * m * k * n
+    ring_ideal = 10 * macs / V5E_INT8_OPS  # 10 limb passes
+    bin_ideal = 4 * macs / V5E_INT8_OPS
+    bb_ideal = 1 * macs / V5E_INT8_OPS
+
+    f = jax.jit(ref.ring_matmul_ref)
+    rows.append(("kernel.ring_matmul.512", _t(f, a, b) * 1e6,
+                 f"tpu_v5e_ideal_us={ring_ideal*1e6:.2f} limbs=10/16"))
+    f2 = jax.jit(ref.binary_weight_matmul_ref)
+    rows.append(("kernel.binary_weight.512", _t(f2, a, w8) * 1e6,
+                 f"tpu_v5e_ideal_us={bin_ideal*1e6:.2f} limbs=4 "
+                 f"speedup_vs_general=2.5x"))
+    f3 = jax.jit(ref.binary_binary_matmul_ref)
+    rows.append(("kernel.binary_binary.512", _t(f3, a8, w8) * 1e6,
+                 f"tpu_v5e_ideal_us={bb_ideal*1e6:.2f} limbs=1 "
+                 f"speedup_vs_general=10x"))
+
+    q = jax.random.normal(key, (1, 512, 8, 64), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (1, 512, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, 512, 2, 64))
+    f4 = jax.jit(ref.flash_attention_ref)
+    attn_flops = 4 * 512 * 512 * 8 * 64 / 2
+    rows.append(("kernel.flash_attn_ref.512", _t(f4, q, kk, v) * 1e6,
+                 f"tpu_v5e_ideal_us={attn_flops/197e12*1e6:.2f}"))
+
+    # SSD chunked scan (mamba2 hot spot): interpret-mode correctness is in
+    # tests/test_ssd_kernel.py; project the intra-chunk matrix-form FLOPs.
+    s, hh, hd, n, qc = 512, 4, 64, 32, 64
+    ssd_flops = 2 * s * hh * (qc * n + qc * hd + 2 * hd * n)
+    rows.append(("kernel.ssd_scan.512", 0.0,
+                 f"tpu_v5e_ideal_us={ssd_flops/197e12*1e6:.3f} "
+                 f"chunk={qc} (intra-chunk MXU matrix form)"))
+    return rows

@@ -1,0 +1,141 @@
+"""Benchmarks mirroring the paper's tables.
+
+Table 1 — MNIST nets (MnistNet1-3): secure-inference time (LAN/WAN network
+model) + communication MB.  Comm/rounds are architecture-determined, so they
+reproduce the paper's columns without trained weights; accuracy columns need
+the (synthetic-data) training pass in examples/distill_cbnn.py and are
+reported there (offline container ⇒ no true MNIST; DESIGN.md §9).
+
+Table 2 — CifarNet2: typical BNN vs MPC-friendly customized BNN (separable
+convs): params, comm, modeled time.
+
+Table 3 — CIFAR-10 CifarNet2 under CBNN (our framework's row).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import LAN, RING32, WAN, Parties, share
+from repro.core.secure_model import (compile_secure, secure_infer,
+                                     secure_infer_cost)
+from repro.nn import bnn
+
+
+def _model(net: str):
+    params = bnn.init_bnn(jax.random.PRNGKey(0), net)
+    params = jax.tree.map(lambda p: p * 0.5 if p.ndim > 1 else p, params)
+    return compile_secure(params, net, jax.random.PRNGKey(1), RING32), params
+
+
+def _query_seconds(model, shape, iters: int = 2) -> float:
+    parties = Parties.setup(jax.random.PRNGKey(2))
+    x = np.random.default_rng(0).normal(0, 0.5, (1,) + shape).astype(np.float32)
+    xs = share(x, jax.random.PRNGKey(3), RING32)
+    out = secure_infer(model, xs, parties)  # warm (traced eagerly)
+    np.asarray(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        np.asarray(secure_infer(model, xs, parties))
+    return (time.perf_counter() - t0) / iters
+
+
+def table1():
+    """MNIST nets: per-party comm + LAN/WAN modeled times (paper Table 1).
+
+    Two rows per net: the paper-faithful protocol stack, and the
+    beyond-paper fused-round variant (mul+open / matmul+trunc in one round,
+    EXPERIMENTS.md §Perf cell 3)."""
+    from repro.core.linear import set_fused_rounds
+    rows = []
+    paper = {"MnistNet1": (0.010, 0.21, 0.010),
+             "MnistNet2": (0.010, 0.32, 0.033),
+             "MnistNet3": (0.015, 0.97, 0.370)}
+    for net in ("MnistNet1", "MnistNet2", "MnistNet3"):
+        model, _ = _model(net)
+        cpu_s = _query_seconds(model, (28, 28, 1))
+        p_lan, p_wan, p_mb = paper[net]
+        for fused in (False, True):
+            set_fused_rounds(fused)
+            try:
+                led = secure_infer_cost(model, (1, 28, 28, 1))
+            finally:
+                set_fused_rounds(False)
+            mb = led.megabytes / 3  # per-party (paper's convention)
+            lan, wan = led.time(LAN), led.time(WAN)
+            tag = "fused" if fused else "faithful"
+            rows.append((f"table1.{net}.{tag}", cpu_s * 1e6,
+                         f"commMB/party={mb:.3f} (paper {p_mb}) "
+                         f"rounds={led.rounds} LAN={lan:.3f}s (paper {p_lan}) "
+                         f"WAN={wan:.2f}s (paper {p_wan})"))
+    return rows
+
+
+def _macs(net: str) -> int:
+    """Multiply-accumulates of one inference (plaintext conv arithmetic)."""
+    h, w, c = bnn.INPUT_SHAPES[net]
+    total = 0
+    for l in bnn.ALL_NETS[net]:
+        if l.kind == "conv":
+            ho = (h + 2 * l.pad - l.k) // l.stride + 1
+            total += ho * ho * l.out * l.k * l.k * c
+            h = w = ho
+            c = l.out
+        elif l.kind == "sepconv":
+            ho = (h + 2 * l.pad - l.k) // l.stride + 1
+            total += ho * ho * c * l.k * l.k       # depthwise
+            total += ho * ho * c * l.out           # pointwise
+            h = w = ho
+            c = l.out
+        elif l.kind == "fc":
+            total += c * l.out if h == 1 else h * w * c * l.out
+            if h != 1:
+                h = w = 1
+            c = l.out
+        elif l.kind == "maxpool":
+            h, w = h // 2, w // 2
+        elif l.kind == "flatten":
+            c, h, w = h * w * c, 1, 1
+    return total
+
+
+def table2():
+    """Typical vs customized CifarNet2 (paper Table 2).
+
+    Note on the comm column: the paper's −35.8% comm tracks circuit-size
+    (MAC)-proportional cost; pure-RSS comm is activation-proportional, so
+    separable convs cut params/MACs (reported) while adding the depthwise
+    intermediate's reshare — an honest divergence, see EXPERIMENTS.md.
+    """
+    rows = []
+    out = {}
+    for label, net in (("typical", "CifarNet2-typical"),
+                       ("customized", "CifarNet2")):
+        model, params = _model(net)
+        led = secure_infer_cost(model, (1, 32, 32, 3))
+        out[label] = (bnn.param_count(params), led.megabytes / 3,
+                      led.time(LAN), led.time(WAN), led.rounds, _macs(net))
+        rows.append((f"table2.{label}", led.time(LAN) * 1e6,
+                     f"params={out[label][0]} MACs={out[label][5]} "
+                     f"commMB/party={out[label][1]:.3f} "
+                     f"LAN={out[label][2]:.3f}s WAN={out[label][3]:.2f}s "
+                     f"rounds={out[label][4]}"))
+    t, c = out["typical"], out["customized"]
+    rows.append(("table2.delta", 0.0,
+                 f"params{100*(c[0]/t[0]-1):+.1f}% (paper -82.3%) "
+                 f"MACs{100*(c[5]/t[5]-1):+.1f}% "
+                 f"comm{100*(c[1]/t[1]-1):+.1f}% (paper -35.8%; see note) "
+                 f"WAN{100*(c[3]/t[3]-1):+.1f}% (paper -72.1%)"))
+    return rows
+
+
+def table3():
+    """CIFAR-10 CifarNet2 secure inference — CBNN row of paper Table 3."""
+    model, _ = _model("CifarNet2")
+    led = secure_infer_cost(model, (1, 32, 32, 3))
+    return [("table3.CBNN.CifarNet2", led.time(LAN) * 1e6,
+             f"commMB/party={led.megabytes/3:.3f} (paper 8.291 total/2.76pp) "
+             f"LAN={led.time(LAN):.3f}s (paper 0.311) "
+             f"WAN={led.time(WAN):.2f}s (paper 0.871) rounds={led.rounds}")]

@@ -1,0 +1,61 @@
+"""Aggregate the dry-run farm's results/ into the roofline table
+(EXPERIMENTS.md §Roofline) and CSV rows for benchmarks.run."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def load(variant: str = "baseline"):
+    recs = []
+    for p in sorted(RESULTS.glob(f"*__{variant}.json")):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except json.JSONDecodeError:
+            pass
+    return recs
+
+
+def rows(variant: str = "baseline", mesh: str = "single"):
+    out = []
+    for r in load(variant):
+        if r.get("mesh") != mesh:
+            continue
+        name = f"roofline.{r['arch']}.{r['shape']}.{mesh}"
+        if r["status"] != "OK":
+            out.append((name, 0.0, f"SKIP: {r.get('reason', '')[:60]}"))
+            continue
+        t = r["roofline"]
+        out.append((name, t["step_time_bound_s"] * 1e6,
+                    f"dom={t['dominant']} frac={t.get('roofline_frac', 0):.3f} "
+                    f"comp={t['compute_s']:.3g}s mem={t['memory_s']:.3g}s "
+                    f"coll={t['collective_s']:.3g}s"))
+    return out
+
+
+def markdown_table(variant: str = "baseline", mesh: str = "single") -> str:
+    lines = ["| arch | shape | status | compute_s | memory_s | collective_s "
+             "| dominant | MODEL_FLOPs/HLO | roofline frac | peak GB/chip |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(variant):
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | "
+                         f"— | — | — | — |  <!-- {r.get('reason','')} -->")
+            continue
+        t = r["roofline"]
+        mem = r["memory"]["peak_bytes_est"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | OK "
+            f"| {t['compute_s']:.4g} | {t['memory_s']:.4g} "
+            f"| {t['collective_s']:.4g} | **{t['dominant']}** "
+            f"| {t['useful_flops_frac']:.2f} "
+            f"| {t.get('roofline_frac', 0):.3f} | {mem:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

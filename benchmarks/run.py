@@ -1,0 +1,54 @@
+"""Benchmark harness entry point — one function per paper table/figure plus
+the kernel microbenchmarks, secure-LM customization sweep, and the roofline
+table from the dry-run farm.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,kernels,...]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: table1,table2,table3,"
+                         "kernels,secure_lm,roofline")
+    args = ap.parse_args()
+    want = set(filter(None, args.only.split(",")))
+
+    from . import (kd_curves, kernel_bench, paper_tables, roofline_report,
+                   secure_lm)
+
+    suites = {
+        "table1": paper_tables.table1,
+        "table2": paper_tables.table2,
+        "table3": paper_tables.table3,
+        "kd": kd_curves.kd_curves,
+        "kernels": kernel_bench.kernels,
+        "secure_lm": secure_lm.secure_lm,
+        "roofline": roofline_report.rows,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if want and name not in want:
+            continue
+        try:
+            for row in fn():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,{traceback.format_exc(limit=1)!r}",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

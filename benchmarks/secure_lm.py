@@ -1,0 +1,31 @@
+"""Secure-transformer benchmark: the paper's customization recipe applied to
+an LM block — customized ReLU-attention vs full secure softmax (per-token
+comm/rounds at several sequence lengths)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import LAN, WAN, Parties
+from repro.core.comm import estimate_cost
+from repro.core.rss import share
+from repro.core.secure_transformer import secure_block, share_block_params
+import numpy as np
+
+
+def secure_lm():
+    rows = []
+    d, heads, d_ff = 64, 4, 128
+    bp, _ = share_block_params(jax.random.PRNGKey(0), d, heads, d_ff)
+    for seq in (8, 16, 32):
+        x = np.zeros((seq, d), np.float32)
+        xs = share(x, jax.random.PRNGKey(1))
+        for customized in (True, False):
+            led = estimate_cost(
+                lambda s: secure_block(
+                    s, bp, Parties.setup(jax.random.PRNGKey(2)),
+                    customized=customized), xs)
+            tag = "custom" if customized else "softmax"
+            rows.append((f"secure_lm.{tag}.seq{seq}", led.time(LAN) * 1e6,
+                         f"rounds={led.rounds} MB/party={led.megabytes/3:.3f} "
+                         f"WAN={led.time(WAN):.2f}s"))
+    return rows

@@ -1,0 +1,33 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import jax
+from repro.configs import get_config
+from repro.launch.dryrun import dryrun_cell  # noqa: E402  (env set above)
+import repro.launch.dryrun as dr
+from repro.launch import mesh as mesh_lib, steps as steps_lib
+from repro.launch.context import use_plan
+from repro.configs import SHAPES, register
+
+base = get_config("jamba-v0.1-52b")
+variants = {
+    "full": base,
+    "no_moe": dataclasses.replace(base, name="jamba-nomoe", moe=False,
+                                  n_experts=0, experts_per_tok=0),
+    "no_mamba": dataclasses.replace(base, name="jamba-nomamba", ssm=False,
+                                    attn_period=0, ssd_chunk=0),
+    "no_moe_no_mamba": dataclasses.replace(base, name="jamba-dense",
+                                           moe=False, n_experts=0,
+                                           experts_per_tok=0, ssm=False,
+                                           attn_period=0),
+}
+for name, cfg in variants.items():
+    register(cfg)
+    try:
+        rec = dryrun_cell(cfg.name, "train_4k", "single")
+        m = rec["memory"]
+        print(f"{name:18s} tempGB={m['temp_bytes']/1e9:8.1f} "
+              f"argGB={m['argument_bytes']/1e9:6.1f} "
+              f"compile={rec['compile_s']}s", flush=True)
+    except Exception as e:
+        print(name, "FAIL", str(e)[:200], flush=True)

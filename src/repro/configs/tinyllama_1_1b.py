@@ -1,0 +1,10 @@
+"""TinyLlama-1.1B [arXiv:2401.02385; hf].
+22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000, llama2 arch."""
+from . import ArchConfig, register
+
+register(ArchConfig(
+    name="tinyllama-1.1b", family="dense",
+    n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=64,
+    d_ff=5632, vocab=32000,
+    act="silu", gated_mlp=True, norm="rmsnorm", rope=True,
+))

@@ -1,0 +1,18 @@
+"""CBNN core: 3-party RSS protocols for secure BNN / transformer inference."""
+from .ring import RingSpec, RING32, RING64, default_ring
+from .rss import RSS, BinRSS, share, reconstruct, share_bits, reconstruct_bits
+from .randomness import Parties
+from .ot import ot3
+from .linear import (reveal, mul, square, matmul, conv2d, truncate,
+                     linear_layer, set_matmul_mode)
+from .msb import b2a, msb_extract, a2b_msb, DEFAULT_BOUND_BITS
+from .activation import (secure_sign, secure_relu, sign_from_msb,
+                         relu_from_msb, select_from_msb)
+from .norm import (fuse_bn_sign_threshold, fuse_bn_linear,
+                   apply_sign_bn_shift, secure_rmsnorm, newton_rsqrt,
+                   newton_reciprocal)
+from .pooling import sign_maxpool_fused, secure_maxpool, secure_max_lastdim
+from .softmax import (secure_exp, secure_softmax, relu_attention_scores,
+                      secure_argmax_onehot)
+from .comm import LAN, WAN, CommLedger, estimate_cost
+from . import comm

@@ -1,0 +1,131 @@
+"""Secure activation functions (paper Algorithms 4 & 5).
+
+Both consume the binary shares [MSB(x)]^B produced by Algorithm 3 and use
+the 3-party OT.  The OT constructions land the results *directly in RSS
+layout* (each message/mask is known to exactly the two parties that must
+hold that share slot) — no extra reshare for Sign; one for ReLU.
+
+Sign outputs the indicator bit  s = 1 ⊕ MSB(x) ∈ {0,1}  as arithmetic
+shares.  The BNN's ±1 activation is the affine map 2s−1, which downstream
+linear layers fold into their weights/bias locally (see nn/bnn.py), so no
+protocol cost is paid for the {0,1}→{−1,+1} lift.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import comm
+from .linear import _reshare
+from .msb import msb_extract, DEFAULT_BOUND_BITS
+from .ot import ot3
+from .randomness import Parties
+from .ring import RingSpec
+from .rss import RSS, BinRSS, PARTIES
+
+__all__ = ["secure_sign", "secure_relu", "sign_from_msb", "relu_from_msb",
+           "select_from_msb"]
+
+
+def sign_from_msb(msb: BinRSS, parties: Parties, ring: RingSpec,
+                  tag: str = "sign") -> RSS:
+    """Algorithm 4: arithmetic RSS of  1 ⊕ MSB(x)  from its binary shares.
+
+    β1 (common P0,P1 via PRF k1) and β2 (common P1,P2 via PRF k2) mask the
+    messages; P1 builds m_j = (1 ⊕ j ⊕ MSB_1 ⊕ MSB_2) − β1 − β2; the OT
+    (receiver P0, helper P2, choice MSB_0) gives P0
+        m_c = (1 ⊕ MSB) − β1 − β2,
+    which P0 forwards to P2.  Share slots: x0 = m_c (held P0&P2),
+    x1 = β1 (P0&P1... slot x1 is held by P0 and P1), x2 = β2 (P1&P2) —
+    a valid RSS with zero extra reshare.
+    """
+    b0, b1, b2 = msb.shares[0], msb.shares[1], msb.shares[2]
+    shape = b0.shape
+    beta1 = parties.common_pair(0, 1, shape, ring)  # key k1: P0 & P1
+    beta2 = parties.common_pair(1, 2, shape, ring)  # key k2: P1 & P2
+
+    base = (jnp.asarray(1, jnp.uint8) ^ b1 ^ b2).astype(ring.dtype)
+    m0 = (base - beta1 - beta2).astype(ring.dtype)
+    m1 = (((jnp.asarray(1, jnp.uint8) ^ b1 ^ b2) ^ jnp.asarray(1, jnp.uint8))
+          .astype(ring.dtype) - beta1 - beta2).astype(ring.dtype)
+    mc = ot3(m0, m1, b0, sender=1, receiver=0, helper=2,
+             parties=parties, ring=ring, tag=tag + ".ot")
+    # P0 -> P2: m_c (1 round, 1 element)
+    comm.record(tag + ".fwd", rounds=1, nbytes=int(mc.size) * ring.nbytes)
+    return RSS(jnp.stack([mc, beta1, beta2]), ring)
+
+
+def secure_sign(x: RSS, parties: Parties,
+                bound_bits: int = DEFAULT_BOUND_BITS,
+                tag: str = "sign") -> RSS:
+    """Sign activation: MSB extraction (Alg 3) + Alg 4.  Output ∈ {0,1}."""
+    msb = msb_extract(x, parties, bound_bits=bound_bits, tag=tag + ".msb")
+    return sign_from_msb(msb, parties, x.ring, tag=tag)
+
+
+def _bit_times_value_ot(msb: BinRSS, value, *, sender: int, receiver: int,
+                        helper: int, parties: Parties, ring: RingSpec,
+                        complement: bool, tag: str):
+    """Shared core of Alg 5: OT-transfer (c ⊕ bits...)·value − masks, where
+    ``value`` is a tensor known to `sender`.  Returns the three additive
+    share slabs (receiver_share, sender_mask1, sender_mask2) in role order.
+    """
+    s_view = [(sender + k) % PARTIES for k in (0, 1)]
+    # sender knows its two MSB share slots; receiver+helper know the third.
+    other = 3 - sum(s_view) if set(s_view) != {0, 2} else 1
+    bs = msb.shares[s_view[0]] ^ msb.shares[s_view[1]]
+    choice = msb.shares[other]
+    shape = bs.shape
+
+    mask_a = parties.private_to(sender, shape, ring)
+    # second mask: common between sender and helper so it lands in a valid slot
+    mask_b = parties.common_pair(sender, helper, shape, ring)
+
+    one = jnp.asarray(1, jnp.uint8)
+    sel0 = ((one if complement else jnp.asarray(0, jnp.uint8)) ^ bs).astype(ring.dtype)
+    sel1 = sel0 ^ jnp.asarray(1, ring.dtype)
+    m0 = (sel0 * value - mask_a - mask_b).astype(ring.dtype)
+    m1 = (sel1 * value - mask_a - mask_b).astype(ring.dtype)
+    mc = ot3(m0, m1, choice, sender=sender, receiver=receiver, helper=helper,
+             parties=parties, ring=ring, tag=tag)
+    return mc, mask_a, mask_b
+
+
+def relu_from_msb(x: RSS, msb: BinRSS, parties: Parties,
+                  tag: str = "relu") -> RSS:
+    """Algorithm 5: [ReLU(x)]^A = [(1 ⊕ MSB(x)) · x]^A via two parallel OTs.
+
+    OT-A (sender P1, receiver P0, helper P2): transfers (1⊕MSB)·(x1+x2).
+    OT-B (sender P0, receiver P2, helper P1): transfers (1⊕MSB)·x0.
+    The two run in the same 2 network rounds; one reshare returns to RSS.
+    """
+    ring = x.ring
+    with comm.round_barrier(tag + ".ots", rounds=2):
+        # OT-A: P1 knows (x1, x2) and MSB shares (MSB_1, MSB_2); choice MSB_0.
+        a_recv, a_m1, a_m2 = _bit_times_value_ot(
+            msb, x.shares[1] + x.shares[2], sender=1, receiver=0, helper=2,
+            parties=parties, ring=ring, complement=True, tag=tag + ".otA")
+        # OT-B: P0 knows x0 and (MSB_0, MSB_1); choice MSB_2.
+        b_recv, b_m0, b_m1 = _bit_times_value_ot(
+            msb, x.shares[0], sender=0, receiver=2, helper=1,
+            parties=parties, ring=ring, complement=True, tag=tag + ".otB")
+    # additive recombination per party:
+    #   P0: a_recv + b_m0 ; P1: a_m1 + b_m1 ; P2: a_m2 + b_recv
+    z = jnp.stack([a_recv + b_m0, a_m1 + b_m1, a_m2 + b_recv])
+    return _reshare(z, ring, parties, tag + ".reshare")
+
+
+def secure_relu(x: RSS, parties: Parties,
+                bound_bits: int = DEFAULT_BOUND_BITS,
+                tag: str = "relu") -> RSS:
+    """Full secure ReLU: Alg 3 (2 online rounds) + Alg 5 (3 rounds)."""
+    msb = msb_extract(x, parties, bound_bits=bound_bits, tag=tag + ".msb")
+    return relu_from_msb(x, msb, parties, tag=tag)
+
+
+def select_from_msb(a: RSS, b: RSS, msb: BinRSS, parties: Parties,
+                    tag: str = "select") -> RSS:
+    """Oblivious select: returns a where MSB==0 else b
+    (= b + (1⊕MSB)·(a−b)); building block for secure max / argmax."""
+    diff = a - b
+    gated = relu_from_msb(diff, msb, parties, tag=tag)
+    return b + gated

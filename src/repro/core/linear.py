@@ -1,0 +1,375 @@
+"""Linear-layer protocols over RSS (paper Algorithm 2) + truncation + reveal.
+
+Multiplication identity (Araki et al.): with x = Σ x_i, y = Σ y_i,
+    z_i = x_i·y_i + x_{i+1}·y_i + x_i·y_{i+1} + a_i,   Σ a_i = 0
+gives Σ z_i = x·y.  P_i computes z_i purely from its view (x_i, x_{i+1}),
+(y_i, y_{i+1}) and its zero-share a_i, then re-shares z_i to P_{i-1}
+(1 round, one ring element each).
+
+Beyond-paper optimization ("fused-operand", §Perf): per party
+    z_i = x_i·(y_i + y_{i+1}) + x_{i+1}·y_i + a_i
+— identical value, but for matmul/conv this is 2 ring matmuls per party
+instead of 3 (33% of the MPC linear-layer FLOPs removed).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import comm
+from .randomness import Parties
+from .ring import RingSpec
+from .rss import RSS, PARTIES
+
+__all__ = ["reveal", "mul", "matmul", "conv2d", "truncate",
+           "truncate_probabilistic", "linear_layer", "square",
+           "set_matmul_mode"]
+
+# "opt2" = fused-operand (2 matmuls/party); "paper3" = Algorithm 2 verbatim.
+_MATMUL_MODE = "opt2"
+# round-fused protocol variants (mul_open / matmul_truncate): beyond-paper;
+# False = paper-faithful round structure.
+_FUSED_ROUNDS = False
+
+
+def set_matmul_mode(mode: str):
+    global _MATMUL_MODE
+    assert mode in ("opt2", "paper3")
+    _MATMUL_MODE = mode
+
+
+def set_fused_rounds(on: bool):
+    global _FUSED_ROUNDS
+    _FUSED_ROUNDS = bool(on)
+
+
+def fused_rounds() -> bool:
+    return _FUSED_ROUNDS
+
+
+# ---------------------------------------------------------------------------
+# Reveal
+# ---------------------------------------------------------------------------
+
+def reveal(x: RSS, tag: str = "reveal", decode: bool = False):
+    """Open x to all parties: P_i sends x_i to P_{i-1}; 1 round, 3 elements."""
+    comm.record(tag, rounds=1, nbytes=3 * _numel(x) * x.ring.nbytes)
+    total = x.shares[0] + x.shares[1] + x.shares[2]
+    return x.ring.decode(total) if decode else total
+
+
+# ---------------------------------------------------------------------------
+# Multiplication (elementwise) and matmul
+# ---------------------------------------------------------------------------
+
+def _numel(x: RSS) -> int:
+    n = 1
+    for d in x.shape:
+        n *= int(d)
+    return n
+
+
+def _reshare(z_parts, ring: RingSpec, parties: Parties, tag: str) -> RSS:
+    """z_parts: (3, *shape) additive shares z_i computed by each P_i.
+    Adds the 3-of-3 zero mask and performs the reshare round
+    (P_i -> P_{i-1}), after which P_i holds (z_i, z_{i+1})."""
+    a = parties.zero_shares(z_parts.shape[1:], ring)
+    z = z_parts + a
+    n = 1
+    for d in z.shape[1:]:
+        n *= int(d)
+    comm.record(tag, rounds=1, nbytes=3 * n * ring.nbytes)
+    return RSS(z, ring)
+
+
+def _align_party_axis(xs, ys):
+    """Broadcast two share stacks, keeping axis 0 as the party axis."""
+    nd = max(xs.ndim, ys.ndim)
+    if xs.ndim < nd:
+        xs = xs.reshape(xs.shape[:1] + (1,) * (nd - xs.ndim) + xs.shape[1:])
+    if ys.ndim < nd:
+        ys = ys.reshape(ys.shape[:1] + (1,) * (nd - ys.ndim) + ys.shape[1:])
+    return xs, ys
+
+
+def mul(x: RSS, y: RSS, parties: Parties, tag: str = "mul") -> RSS:
+    """Elementwise secure multiplication. Output scale = sum of input scales
+    (caller truncates when both operands are fixed-point)."""
+    xs, ys = _align_party_axis(x.shares, y.shares)
+    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
+    if _MATMUL_MODE == "opt2":
+        z = xs * (ys + yn) + xn * ys
+    else:
+        z = xs * ys + xn * ys + xs * yn
+    return _reshare(z, x.ring, parties, tag)
+
+
+def square(x: RSS, parties: Parties, tag: str = "square") -> RSS:
+    """x^2 with one fewer local product: z_i = x_i^2 + 2·x_i·x_{i+1}."""
+    xs = x.shares
+    xn = jnp.roll(xs, -1, axis=0)
+    z = xs * xs + jnp.asarray(2, x.ring.dtype) * xs * xn
+    return _reshare(z, x.ring, parties, tag)
+
+
+def _ring_dot(a, b, ring: RingSpec):
+    """Integer matmul in the ring; wraps mod 2^l by construction."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=ring.dtype)
+
+
+def matmul(x: RSS, w: RSS, parties: Parties, tag: str = "matmul",
+           dot=None) -> RSS:
+    """Secure matmul  z = x @ w  (x: (..., K), w: (K, N)).
+
+    ``dot`` may be swapped for the Pallas ring-matmul kernel
+    (kernels/ops.py::ring_matmul) — same contract: uintL x uintL -> uintL
+    mod 2^l.
+    """
+    dot = dot or (lambda a, b: _ring_dot(a, b, x.ring))
+    xs, ws = x.shares, w.shares
+    xn, wn = jnp.roll(xs, -1, axis=0), jnp.roll(ws, -1, axis=0)
+    if _MATMUL_MODE == "opt2":
+        # z_i = x_i @ (w_i + w_{i+1}) + x_{i+1} @ w_i      (2 matmuls/party)
+        z = jnp.stack([dot(xs[i], ws[i] + wn[i]) + dot(xn[i], ws[i])
+                       for i in range(PARTIES)])
+    else:
+        # Algorithm 2 verbatim                              (3 matmuls/party)
+        z = jnp.stack([dot(xs[i], ws[i]) + dot(xn[i], ws[i]) + dot(xs[i], wn[i])
+                       for i in range(PARTIES)])
+    return _reshare(z, x.ring, parties, tag)
+
+
+# ---------------------------------------------------------------------------
+# Fused one-round variants (beyond-paper §Perf optimizations)
+# ---------------------------------------------------------------------------
+
+def mul_open(x: RSS, y: RSS, parties: Parties, tag: str = "mul_open"):
+    """Multiply-and-reveal in ONE round (beyond-paper).
+
+    When a product is immediately opened (MSB protocol step 9-10), the
+    reshare round is wasted: each P_i broadcasts its additive z_i directly
+    and everyone sums.  1 round / 6 elements vs mul(1r/3el)+reveal(1r/3el).
+    """
+    xs, ys = _align_party_axis(x.shares, y.shares)
+    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
+    z = xs * (ys + yn) + xn * ys
+    z = z + parties.zero_shares(z.shape[1:], x.ring)
+    n = 1
+    for d in z.shape[1:]:
+        n *= int(d)
+    # each party broadcasts z_i to both peers: 6 messages, one round
+    comm.record(tag, rounds=1, nbytes=6 * n * x.ring.nbytes)
+    return z[0] + z[1] + z[2]
+
+
+def matmul_truncate(x: RSS, w: RSS, parties: Parties,
+                    tag: str = "matmul_tr", dot=None) -> RSS:
+    """Fused Alg-2 matmul + Π_trunc in ONE online round (beyond-paper).
+
+    The reshare round already moves one ring element per output slot; the
+    truncation's masked opening rides the same round: parties compute the
+    additive product z_i, subtract their (offline) bounded mask share r_i,
+    and broadcast  c_i = z_i − r_i + offset_i ; everyone opens c = z − r +
+    2^{l−2} locally and finishes the shift exactly as in `truncate`.
+    1 round / 6 elements vs matmul(1r/3el)+trunc(1r/3el) = 2 rounds.
+    """
+    ring = x.ring
+    f = ring.frac
+    dot = dot or (lambda a, b: _ring_dot(a, b, ring))
+    xs, ws = x.shares, w.shares
+    xn, wn = jnp.roll(xs, -1, axis=0), jnp.roll(ws, -1, axis=0)
+    if _MATMUL_MODE == "opt2":
+        z = jnp.stack([dot(xs[i], ws[i] + wn[i]) + dot(xn[i], ws[i])
+                       for i in range(PARTIES)])
+    else:
+        z = jnp.stack([dot(xs[i], ws[i]) + dot(xn[i], ws[i]) + dot(xs[i], wn[i])
+                       for i in range(PARTIES)])
+    return _open_shift(z, parties, ring, f, tag)
+
+
+def _open_shift(z, parties: Parties, ring: RingSpec, f: int, tag: str) -> RSS:
+    """Shared tail of the fused ops: mask additive parts with the bounded
+    trunc pair, broadcast, open, arithmetic-shift.  One round, 6 elements."""
+    z = z + parties.zero_shares(z.shape[1:], ring)
+    r = parties.rand_rss(z.shape[1:], ring, max_bits=ring.bits - 1)
+    rp = RSS(r.shares >> f, ring)
+    offset = jnp.asarray(1 << (ring.bits - 2), ring.dtype)
+    c_parts = z - r.shares
+    n = 1
+    for d in z.shape[1:]:
+        n *= int(d)
+    comm.record(tag, rounds=1, nbytes=6 * n * ring.nbytes)
+    c = c_parts[0] + c_parts[1] + c_parts[2] + offset
+    c_shift = (ring.to_signed(c) >> f).astype(ring.dtype)
+    public = c_shift - jnp.asarray(1 << (ring.bits - 2 - f), ring.dtype) \
+        + jnp.asarray(1, ring.dtype)
+    return rp.add_public(public)
+
+
+def mul_truncate(x: RSS, y: RSS, parties: Parties, frac: int | None = None,
+                 tag: str = "mul_tr") -> RSS:
+    """Fused elementwise multiply + truncate, one online round."""
+    ring = x.ring
+    xs, ys = _align_party_axis(x.shares, y.shares)
+    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
+    z = xs * (ys + yn) + xn * ys
+    return _open_shift(z, parties, ring, ring.frac if frac is None else frac,
+                       tag)
+
+
+def square_truncate(x: RSS, parties: Parties, frac: int | None = None,
+                    tag: str = "sq_tr") -> RSS:
+    ring = x.ring
+    xs = x.shares
+    xn = jnp.roll(xs, -1, axis=0)
+    z = xs * xs + jnp.asarray(2, ring.dtype) * xs * xn
+    return _open_shift(z, parties, ring, ring.frac if frac is None else frac,
+                       tag)
+
+
+# ---------------------------------------------------------------------------
+# Convolution = im2col + ring matmul (TPU has no integer conv primitive;
+# see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def _im2col(x, kh: int, kw: int, stride: int, padding: int):
+    """x: (B, H, W, C) -> (B, Ho, Wo, kh*kw*C) patches."""
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    b, h, w, c = x.shape
+    ho = (h - kh) // stride + 1
+    wo = (w - kw) // stride + 1
+    idx_h = jnp.arange(ho) * stride
+    idx_w = jnp.arange(wo) * stride
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(jax.lax.dynamic_slice_in_dim(
+                jax.lax.dynamic_slice_in_dim(x, i, h - kh + 1, axis=1),
+                j, w - kw + 1, axis=2)[:, ::stride, ::stride, :])
+    return jnp.concatenate(patches, axis=-1), ho, wo
+
+
+def conv2d(x: RSS, w: RSS, parties: Parties, stride: int = 1,
+           padding: int = 0, groups: int = 1, tag: str = "conv") -> RSS:
+    """Secure 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin/groups,Cout)."""
+    kh, kw, cin_g, cout = (int(d) for d in w.shape)
+    if groups == 1:
+        cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
+        wmat = w.reshape(kh * kw * cin_g, cout)
+        return matmul(cols, wmat, parties, tag=tag)
+    # Depthwise (groups == Cin, cin_g == 1): per-channel conv, still one
+    # reshare round for the whole layer.
+    b = int(x.shape[0])
+    cin = int(x.shape[3])
+    assert groups == cin and cin_g == 1 and cout % groups == 0
+    mult = cout // groups
+    cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)  # (...,kh*kw*Cin)
+    cols4 = cols.reshape(b, ho, wo, kh * kw, cin)
+    # einsum over the patch dim per channel: out[...,c*mult+m]
+    xs = cols4.shares
+    ws = w.reshape(kh * kw, 1, cout).shares.reshape(PARTIES, kh * kw, cin, mult)
+    xn, wn = jnp.roll(xs, -1, axis=0), jnp.roll(ws, -1, axis=0)
+
+    def dw(a, bmat):
+        return jnp.einsum("bhwkc,kcm->bhwcm", a, bmat,
+                          preferred_element_type=x.ring.dtype)
+    z = jnp.stack([dw(xs[i], ws[i] + wn[i]) + dw(xn[i], ws[i])
+                   for i in range(PARTIES)])
+    z = z.reshape(PARTIES, b, ho, wo, cout)
+    return _reshare(z, x.ring, parties, tag=tag)
+
+
+def _im2col_rss(x: RSS, kh, kw, stride, padding):
+    p = PARTIES
+    b, h, w, c = (int(d) for d in x.shape)
+    cols, ho, wo = _im2col(x.shares.reshape(p * b, h, w, c),
+                           kh, kw, stride, padding)
+    cols = cols.reshape((p, b) + cols.shape[1:])
+    return RSS(cols, x.ring), ho, wo
+
+
+# ---------------------------------------------------------------------------
+# Truncation (ABY3 Π_trunc1-style; paper §3.3)
+# ---------------------------------------------------------------------------
+
+def truncate(x: RSS, parties: Parties, frac: int | None = None,
+             tag: str = "trunc") -> RSS:
+    """Divide by 2^f after a fixed-point multiply (paper §3.3 Π_trunc).
+
+    Statistical-masking variant with *exact* (never catastrophic) arithmetic:
+
+      offline:  each additive share r_i ~ U[0, 2^{l-3}) from the parties'
+                PRF (purely local), so r = Σ r_i < 3·2^{l-3} < 2^{l-1} and
+                shares of r >> f are the local shifts r_i >> f (no carries
+                can wrap — shares are bounded by construction).
+      online:   open c = (x + 2^{l-2}) − r  (1 round).  The positive offset
+                keeps the opened value inside (−2^{l-1}, 2^{l-1}), so its
+                signed interpretation is exact over the integers — the
+                mod-2^l wrap of ABY3's full-range mask (error 2^{l−f} with
+                probability ≈ |x|/2^l) can never occur.  Result =
+                (c >>_a f) + [r >> f] − 2^{l-2-f} + 1 (bias compensation).
+
+    Deterministic error ≤ 3 ulp; privacy is statistical in the gap between
+    |x| and 2^{l-3} (the standard masking argument; DESIGN.md §10).
+    Requires |x| < 2^{l-3} — callers keep fixed-point magnitudes bounded.
+    """
+    ring = x.ring
+    f = ring.frac if frac is None else frac
+    shape = x.shape
+
+    # ---- offline pair ([r], [r >> f]) — local, zero traffic --------------
+    r = parties.rand_rss(shape, ring, max_bits=ring.bits - 1)  # r_i < 2^{l-3}
+    rp = RSS(r.shares >> f, ring)  # shares positive ⇒ logical == arithmetic
+
+    # ---- online ----------------------------------------------------------
+    offset = jnp.asarray(1 << (ring.bits - 2), ring.dtype)
+    c = reveal(x.add_public(offset) - r, tag=tag)
+    c_shift = (ring.to_signed(c) >> f).astype(ring.dtype)
+    public = c_shift - jnp.asarray(1 << (ring.bits - 2 - f), ring.dtype) \
+        + jnp.asarray(1, ring.dtype)
+    return rp.add_public(public)
+
+
+def truncate_probabilistic(x: RSS, parties: Parties, frac: int | None = None,
+                           tag: str = "trunc_prob") -> RSS:
+    """ABY3 Π_trunc1 with a full-range mask — the paper's citation, kept as
+    the reference baseline.  ±1 ulp usually, but fails catastrophically
+    (error 2^{l-f}) with probability ≈ |x_fixed| / 2^l; see DESIGN.md §10."""
+    ring = x.ring
+    f = ring.frac if frac is None else frac
+    shape = x.shape
+    r = parties.rand_rss(shape, ring)
+    r_plain = r.shares[0] + r.shares[1] + r.shares[2]
+    r_shift = ring.to_signed(r_plain) >> f
+    zero = parties.zero_shares(shape, ring)
+    rp = RSS(zero.at[0].add(r_shift.astype(ring.dtype)), ring)
+    comm.record(tag, rounds=1, nbytes=3 * _numel(x) * ring.nbytes,
+                preprocess=True)
+    masked = reveal(x - r, tag=tag)
+    public = (ring.to_signed(masked) >> f).astype(ring.dtype)
+    return rp.add_public(public)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: complete linear layer (matmul/conv + bias + trunc)
+# ---------------------------------------------------------------------------
+
+def linear_layer(x: RSS, w: RSS, b: RSS | None, parties: Parties,
+                 truncate_out: bool = True, tag: str = "linear",
+                 dot=None) -> RSS:
+    """z = x @ w + b, truncated back to scale 2^f."""
+    z = matmul(x, w, parties, tag=tag, dot=dot)
+    if b is not None:
+        bsh = b.shares.reshape((PARTIES,) + (1,) * (z.ndim - 1) + (-1,))
+        if truncate_out:
+            # product carries scale 2^{2f}; lift the (scale-f) bias to match
+            bsh = bsh << jnp.asarray(z.ring.frac, z.ring.dtype)
+        z = RSS(z.shares + bsh, z.ring)
+    if truncate_out:
+        z = truncate(z, parties, tag=tag + ".trunc")
+    return z

@@ -1,0 +1,133 @@
+"""Batch-normalization fusing protocols (paper §3.5) + secure RMSNorm.
+
+Adaptive fusing — the protocol chosen depends on the *following* activation:
+
+  * BN → Sign:   Sign(γ'x + β') = Sign(x + β'/γ') since γ' > 0.  The model
+    owner shares t = β'/γ' once (preprocessing); online cost is a local add.
+  * BN → ReLU:   fold BN into the preceding linear layer's (W, b)
+    (eqs. 10–11) at customization time; online cost zero.
+
+RMSNorm (transformer substrate, beyond paper): y = x * rsqrt(mean(x²) + ε) * g.
+mean(x²) is one secure square + local averaging; rsqrt uses Newton–Raphson
+with a public power-of-two pre-scale (documented modelling choice).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import comm
+from .linear import (mul, mul_truncate, square, square_truncate, truncate,
+                     fused_rounds)
+from .randomness import Parties
+from .ring import RingSpec
+from .rss import RSS, PARTIES
+
+
+def _mul_tr(a: RSS, b: RSS, parties, tag: str, frac: int | None = None):
+    """mul+trunc — one fused round when the beyond-paper mode is on."""
+    if fused_rounds():
+        return mul_truncate(a, b, parties, frac=frac, tag=tag)
+    return truncate(mul(a, b, parties, tag=tag), parties, frac=frac,
+                    tag=tag + ".t")
+
+
+def _sq_tr(a: RSS, parties, tag: str, frac: int | None = None):
+    if fused_rounds():
+        return square_truncate(a, parties, frac=frac, tag=tag)
+    return truncate(square(a, parties, tag=tag), parties, frac=frac,
+                    tag=tag + ".t")
+
+__all__ = ["fuse_bn_sign_threshold", "fuse_bn_linear", "apply_sign_bn_shift",
+           "secure_rmsnorm", "newton_rsqrt", "newton_reciprocal"]
+
+
+# ---------------------------------------------------------------------------
+# Paper §3.5 — the two fusing modes
+# ---------------------------------------------------------------------------
+
+def fuse_bn_sign_threshold(gamma, beta, mean, var, eps: float = 1e-5):
+    """Plaintext (model-owner side): BN followed by Sign collapses to a
+    per-channel threshold shift t = β'/γ' with γ' = γ/√(σ²+ε) > 0.
+    Returns t to be secret-shared once in preprocessing."""
+    import numpy as np
+    gp = gamma / np.sqrt(var + eps)
+    bp = beta - gamma * mean / np.sqrt(var + eps)
+    if np.any(gp <= 0):
+        raise ValueError("BN-Sign fusing requires γ' > 0 (paper eq. 8)")
+    return bp / gp
+
+
+def fuse_bn_linear(w, b, gamma, beta, mean, var, eps: float = 1e-5):
+    """Plaintext: BN after a linear layer folds into (W, b) (eqs. 10–11)."""
+    import numpy as np
+    s = gamma / np.sqrt(var + eps)
+    w_f = w * s  # broadcast over output channels (last axis)
+    b_f = beta + (b - mean) * s
+    return w_f, b_f
+
+
+def apply_sign_bn_shift(x: RSS, t_shares: RSS) -> RSS:
+    """Online part of BN→Sign fusing: add the pre-shared threshold. Local."""
+    tsh = t_shares.shares.reshape((PARTIES,) + (1,) * (x.ndim - 1) + (-1,))
+    return RSS(x.shares + tsh, x.ring)
+
+
+# ---------------------------------------------------------------------------
+# Newton iterations (standard MPC constructions; substrate for RMSNorm /
+# softmax denominators)
+# ---------------------------------------------------------------------------
+
+def newton_reciprocal(d: RSS, parties: Parties, iters: int = 14,
+                      init: float = 2.0 ** -10, tag: str = "recip") -> RSS:
+    """1/d for d in (0, 2^10): y_{k+1} = y_k (2 - d y_k).
+
+    init must satisfy 0 < y0 < 2/d over the operating range; the public
+    constant 2^-10 converges for d up to 2^10 (quadratic once in range).
+    """
+    ring = d.ring
+    y = RSS(parties.zero_shares(d.shape, ring)
+            .at[0].add(ring.encode(jnp.float32(init))), ring)
+    two = ring.encode(jnp.float32(2.0))
+    for k in range(iters):
+        dy = _mul_tr(d, y, parties, f"{tag}.mul{k}")
+        corr = RSS((jnp.zeros_like(dy.shares).at[0].add(two)) - dy.shares, ring)
+        y = _mul_tr(y, corr, parties, f"{tag}.mul{k}b")
+    return y
+
+
+def newton_rsqrt(d: RSS, parties: Parties, iters: int = 14,
+                 init: float = 0.2, tag: str = "rsqrt") -> RSS:
+    """1/√d: y_{k+1} = y_k (3 - d y_k²) / 2.
+
+    Convergence needs y0 < √(3/d); init=0.2 covers d < 75, and the ×1.5
+    growth phase reaches fixed points ≤ 8 within ~9 iterations with 5 to
+    polish (fixed-point RMSNorm operands land in (0.05, 8) by construction).
+    """
+    ring = d.ring
+    y = RSS(parties.zero_shares(d.shape, ring)
+            .at[0].add(ring.encode(jnp.float32(init))), ring)
+    three = ring.encode(jnp.float32(3.0))
+    for k in range(iters):
+        y2 = _sq_tr(y, parties, f"{tag}.sq{k}")
+        dy2 = _mul_tr(d, y2, parties, f"{tag}.mul{k}")
+        corr = RSS((jnp.zeros_like(dy2.shares).at[0].add(three)) - dy2.shares,
+                   ring)
+        y = _mul_tr(y, corr, parties, f"{tag}.mul{k}b",
+                    frac=ring.frac + 1)  # ×1/2 fused into the shift
+    return y
+
+
+def secure_rmsnorm(x: RSS, gain: RSS, parties: Parties, eps: float = 1e-5,
+                   tag: str = "rmsnorm") -> RSS:
+    """y = x · rsqrt(mean(x², axis=-1) + ε) · g   (transformer substrate)."""
+    ring = x.ring
+    n = int(x.shape[-1])
+    x2 = _sq_tr(x, parties, tag + ".sq")
+    ms = x2.sum(axis=-1, keepdims=True)
+    # multiply by public 1/n in fixed point, then truncate
+    inv_n = ring.encode(jnp.float32(1.0 / n))
+    ms = truncate(ms.mul_public_int(inv_n), parties, tag=tag + ".trn")
+    ms = ms.add_public(jnp.float32(eps))
+    r = newton_rsqrt(ms, parties, tag=tag + ".rsqrt")
+    xn = _mul_tr(x, r, parties, tag + ".mulr")
+    return _mul_tr(xn, gain, parties, tag + ".mulg")

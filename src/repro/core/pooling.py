@@ -1,0 +1,92 @@
+"""Maxpooling protocols (paper §3.6).
+
+Fused Sign→maxpool: after a Sign activation the window holds {0,1} bits (as
+arithmetic shares).  max == OR == [window-sum ≥ 1]: parties sum the window
+shares locally, subtract the public constant 1, and run ONE MSB extraction
+per window — no secure compares (paper's optimization).
+
+General secure maxpool (for ReLU nets): pairwise-max tournament,
+max(a,b) = b + ReLU(a−b), log₂(window) levels of MSB+OT select.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .activation import relu_from_msb, sign_from_msb
+from .msb import msb_extract, DEFAULT_BOUND_BITS
+from .randomness import Parties
+from .rss import RSS, PARTIES
+
+__all__ = ["sign_maxpool_fused", "secure_maxpool", "secure_max_lastdim"]
+
+
+def _window_split(x: RSS, pool: int):
+    """(B, H, W, C) -> list of pool*pool RSS slices aligned per window."""
+    b, h, w, c = (int(d) for d in x.shape)
+    assert h % pool == 0 and w % pool == 0
+    sh = x.shares.reshape(PARTIES, b, h // pool, pool, w // pool, pool, c)
+    return [RSS(sh[:, :, :, i, :, j, :], x.ring)
+            for i in range(pool) for j in range(pool)]
+
+
+def sign_maxpool_fused(sign_bits: RSS, parties: Parties, pool: int = 2,
+                       tag: str = "signmax") -> RSS:
+    """Paper §3.6: maxpool over a Sign layer's {0,1} outputs.
+
+    sum = Σ_window bits − 1 ;  out = 1 ⊕ MSB(sum)  (≥0 ⇒ some bit was 1).
+    One MSB extraction + one Alg-4 conversion per window.
+    """
+    parts = _window_split(sign_bits, pool)
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = acc + p
+    acc = acc.add_public(jnp.asarray(-1, acc.ring.signed_dtype)
+                         .astype(acc.ring.dtype))
+    # window sums are tiny integers: tight bound ⇒ max headroom for the mask
+    msb = msb_extract(acc, parties, bound_bits=4, tag=tag + ".msb")
+    return sign_from_msb(msb, parties, acc.ring, tag=tag + ".sign")
+
+
+def secure_maxpool(x: RSS, parties: Parties, pool: int = 2,
+                   bound_bits: int = DEFAULT_BOUND_BITS,
+                   tag: str = "maxpool") -> RSS:
+    """General maxpool via pairwise-max tournament (baseline the paper's
+    fused protocol is measured against)."""
+    parts = _window_split(x, pool)
+    while len(parts) > 1:
+        nxt = []
+        for i in range(0, len(parts) - 1, 2):
+            a, b = parts[i], parts[i + 1]
+            diff = a - b
+            msb = msb_extract(diff, parties, bound_bits=bound_bits,
+                              tag=tag + ".msb")
+            nxt.append(b + relu_from_msb(diff, msb, parties, tag=tag + ".sel"))
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    return parts[0]
+
+
+def secure_max_lastdim(x: RSS, parties: Parties,
+                       bound_bits: int = DEFAULT_BOUND_BITS,
+                       tag: str = "max") -> RSS:
+    """max over the last dim (softmax stabilization / argmax building block).
+    log₂(n) tournament levels; each level is one batched MSB + select."""
+    n = int(x.shape[-1])
+    cur = x
+    while n > 1:
+        half = n // 2
+        a = cur[..., :half]
+        b = cur[..., half:2 * half]
+        diff = a - b
+        msb = msb_extract(diff, parties, bound_bits=bound_bits,
+                          tag=tag + ".msb")
+        m = b + relu_from_msb(diff, msb, parties, tag=tag + ".sel")
+        if n % 2:
+            m = RSS(jnp.concatenate([m.shares, cur[..., 2 * half:].shares],
+                                    axis=-1), x.ring)
+            n = half + 1
+        else:
+            n = half
+        cur = m
+    return cur

@@ -1,0 +1,115 @@
+"""PRF-based correlated randomness (paper §3.2).
+
+Each party P_i shares a PRF key k_i with P_{i+1}; P_i holds (k_i, k_{i+1}).
+A monotone counter (folded into the key) guarantees freshness.
+
+  3-out-of-3 randomness:  a_i = F(k_{i+1}, cnt) - F(k_i, cnt)   =>  Σ a_i = 0
+  2-out-of-3 randomness:  (a_i, a_{i+1}) = (F(k_i, cnt), F(k_{i+1}, cnt))
+                          => RSS of the random a = Σ F(k_i, cnt)
+
+Note which keys each expression touches: both are computable from P_i's own
+two keys, so locality is faithful.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .ring import RingSpec, default_ring
+from .rss import RSS, BinRSS, PARTIES
+
+__all__ = ["Parties"]
+
+
+def _prf_bits(key, cnt: int, shape, ring: RingSpec):
+    k = jax.random.fold_in(key, cnt)
+    out = jax.random.bits(k, shape, jnp.uint32).astype(ring.dtype)
+    if ring.bits == 64:
+        hi = jax.random.bits(jax.random.fold_in(k, 1), shape, jnp.uint32)
+        out = out | (hi.astype(ring.dtype) << 32)
+    return out
+
+
+@dataclasses.dataclass
+class Parties:
+    """The three-party setup: PRF keys + trace-time freshness counter.
+
+    ``keys[i]`` is k_i (shared between P_i and P_{i+1}).  The counter is a
+    Python int advanced at trace time — every protocol invocation inside one
+    traced program draws distinct randomness; per-call freshness across jit
+    invocations comes from passing a fresh ``session_key``.
+    """
+
+    keys: jax.Array  # (3,) PRNG keys
+    _cnt: int = 0
+
+    @classmethod
+    def setup(cls, session_key) -> "Parties":
+        return cls(jax.random.split(session_key, PARTIES))
+
+    def _next(self) -> int:
+        self._cnt += 1
+        return self._cnt
+
+    # -- 3-out-of-3: additive sharing of zero ----------------------------
+    def zero_shares(self, shape, ring: RingSpec | None = None) -> jax.Array:
+        """(3, *shape) with Σ_i a_i = 0 mod 2^l; a_i from P_i's own keys."""
+        ring = ring or default_ring()
+        cnt = self._next()
+        f = jnp.stack([_prf_bits(self.keys[i], cnt, shape, ring)
+                       for i in range(PARTIES)])
+        # a_i = F(k_{i+1}) - F(k_i)
+        return jnp.roll(f, -1, axis=0) - f
+
+    # -- 2-out-of-3: RSS of a fresh random value --------------------------
+    def rand_rss(self, shape, ring: RingSpec | None = None,
+                 max_bits: int | None = None) -> RSS:
+        """RSS of an unknown-to-all random a (optionally bounded < 2^max_bits).
+
+        For the bounded variant the additive shares of a full-range value
+        cannot be produced purely locally with a magnitude bound, so the
+        bound applies to each PRF draw with shares a_i < 2^{max_bits}/4,
+        giving a < 2^max_bits (used by the MSB mask r).
+        """
+        ring = ring or default_ring()
+        cnt = self._next()
+        f = jnp.stack([_prf_bits(self.keys[i], cnt, shape, ring)
+                       for i in range(PARTIES)])
+        if max_bits is not None:
+            per_share = max(max_bits - 2, 1)
+            f = f & ring.wrap((1 << per_share) - 1)
+        return RSS(f, ring)
+
+    def rand_bits(self, shape) -> BinRSS:
+        """2-of-3 XOR sharing of a fresh random bit tensor."""
+        cnt = self._next()
+        f = jnp.stack([
+            jax.random.bits(jax.random.fold_in(self.keys[i], cnt), shape,
+                            jnp.uint8) & 1
+            for i in range(PARTIES)])
+        return BinRSS(f)
+
+    # -- pairwise common randomness ---------------------------------------
+    def common_pair(self, a: int, b: int, shape, ring: RingSpec | None = None):
+        """Random tensor known to parties a and b only.
+
+        P_i holds (k_i, k_{i+1}), so key k_j is common to P_j and P_{j-1};
+        the pair {i, i+1} shares key k_{i+1}."""
+        ring = ring or default_ring()
+        if (a + 1) % PARTIES == b:
+            kidx = b
+        elif (b + 1) % PARTIES == a:
+            kidx = a
+        else:
+            raise ValueError(f"no common key for pair ({a},{b})")
+        return _prf_bits(self.keys[kidx], self._next(), shape, ring)
+
+    def private_to(self, i: int, shape, ring: RingSpec | None = None):
+        """Random tensor private to P_i (derived from both of P_i's keys so
+        no single other party can recompute it)."""
+        ring = ring or default_ring()
+        cnt = self._next()
+        return (_prf_bits(self.keys[i], cnt, shape, ring)
+                + _prf_bits(self.keys[(i + 1) % PARTIES], cnt, shape, ring))

@@ -1,0 +1,101 @@
+"""Ring Z_{2^l} arithmetic and fixed-point encoding.
+
+CBNN (like ABY3 / Falcon / SecureBiNN) computes over the ring Z_{2^l} with
+l = 32 and fixed-point encoding with ``frac`` fractional bits.  On JAX/TPU we
+represent ring elements as unsigned integers; integer overflow wraps, which is
+exactly arithmetic mod 2^l.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["RingSpec", "RING32", "RING64", "default_ring"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSpec:
+    """Static description of the secure-computation ring Z_{2^bits}.
+
+    frac=12 (vs Falcon's 13) buys exact-truncation headroom: the
+    statistical-masking Π_trunc is wrap-free for |value·2^{2f}| < 2^{l-2},
+    i.e. post-product magnitudes < 2^{l-2-2f} = 64 at f=12 (16 at f=13).
+    """
+
+    bits: int = 32
+    frac: int = 12  # fixed-point fractional bits
+
+    def __post_init__(self):
+        if self.bits not in (8, 16, 32, 64):
+            raise ValueError(f"unsupported ring width {self.bits}")
+
+    # -- dtypes ----------------------------------------------------------
+    @property
+    def dtype(self):
+        return {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32, 64: jnp.uint64}[self.bits]
+
+    @property
+    def signed_dtype(self):
+        return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32, 64: jnp.int64}[self.bits]
+
+    @property
+    def nbytes(self) -> int:
+        return self.bits // 8
+
+    @property
+    def modulus(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac
+
+    # -- casts -----------------------------------------------------------
+    def wrap(self, x):
+        """Cast any integer array into the ring (mod 2^bits)."""
+        return jnp.asarray(x).astype(self.dtype)
+
+    def to_signed(self, u):
+        """Reinterpret ring element as signed two's-complement integer."""
+        return u.astype(self.signed_dtype)
+
+    # -- fixed point -----------------------------------------------------
+    def encode(self, x) -> jnp.ndarray:
+        """float -> ring fixed point (round to nearest)."""
+        scaled = jnp.round(jnp.asarray(x, jnp.float64 if self.bits > 32 else jnp.float32)
+                           * self.scale)
+        return scaled.astype(self.signed_dtype).astype(self.dtype)
+
+    def decode(self, u) -> jnp.ndarray:
+        """ring fixed point -> float."""
+        out_dt = jnp.float64 if self.bits > 32 else jnp.float32
+        return self.to_signed(u).astype(out_dt) / self.scale
+
+    def encode_int(self, x) -> jnp.ndarray:
+        """integer -> ring element (no fixed-point scaling)."""
+        return jnp.asarray(x).astype(self.signed_dtype).astype(self.dtype)
+
+    # -- bit ops ---------------------------------------------------------
+    def msb(self, u) -> jnp.ndarray:
+        """Plaintext most-significant bit (1 iff signed value < 0)."""
+        return (u >> (self.bits - 1)).astype(jnp.uint8)
+
+    def half(self) -> int:
+        """2^{l-1}, the signed/unsigned boundary."""
+        return 1 << (self.bits - 1)
+
+    # -- numpy-side helpers (for tests / data prep) -----------------------
+    def np_dtype(self):
+        return {8: np.uint8, 16: np.uint16, 32: np.uint32, 64: np.uint64}[self.bits]
+
+
+RING32 = RingSpec(bits=32, frac=12)
+RING64 = RingSpec(bits=64, frac=20)
+
+_DEFAULT = RING32
+
+
+def default_ring() -> RingSpec:
+    return _DEFAULT

@@ -1,0 +1,191 @@
+"""Replicated secret sharing (2-out-of-3) over Z_{2^l}  (Araki et al. [2]).
+
+A secret ``x`` is split into additive shares ``x = x0 + x1 + x2 (mod 2^l)``;
+party ``P_i`` holds the pair ``(x_i, x_{i+1})``.  In this single-program
+simulation we store the three additive shares stacked on a leading axis of
+size 3 (``shares[i]`` is ``x_i``); party ``P_i``'s *view* is
+``(shares[i], shares[(i+1) % 3])`` and every protocol only combines values a
+party could actually see (its two shares, PRF keys it holds, and received
+messages) so the protocol logic stays faithful to the 3-party deployment.
+
+Binary sharing ``[y]^B`` (XOR sharing of bits, mod 2) is the same structure
+with XOR in place of + and dtype uint8 in {0, 1}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ring import RingSpec, default_ring
+
+__all__ = ["RSS", "BinRSS", "share", "reconstruct", "share_bits",
+           "reconstruct_bits", "zeros_like_shares"]
+
+PARTIES = 3
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RSS:
+    """Arithmetic replicated secret shares of a tensor over Z_{2^l}."""
+
+    shares: jax.Array  # (3, *shape), unsigned ring dtype
+    ring: RingSpec = dataclasses.field(default_factory=default_ring)
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        return (self.shares,), (self.ring,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    # -- basics ----------------------------------------------------------
+    @property
+    def shape(self):
+        return self.shares.shape[1:]
+
+    @property
+    def dtype(self):
+        return self.shares.dtype
+
+    @property
+    def ndim(self):
+        return self.shares.ndim - 1
+
+    def party_view(self, i: int):
+        """The two shares party i actually holds."""
+        return self.shares[i], self.shares[(i + 1) % PARTIES]
+
+    # -- local (communication-free) linear ops ---------------------------
+    def __add__(self, other):
+        if isinstance(other, RSS):
+            return RSS(self.shares + other.shares, self.ring)
+        return self.add_public(other)
+
+    def __sub__(self, other):
+        if isinstance(other, RSS):
+            return RSS(self.shares - other.shares, self.ring)
+        return self.add_public(jnp.negative(jnp.asarray(other)))
+
+    def __rsub__(self, other):
+        return (-self).add_public(other)
+
+    def __neg__(self):
+        return RSS(jnp.zeros_like(self.shares) - self.shares, self.ring)
+
+    def add_public(self, c):
+        """x + c for public c (encoded): one party adds, others keep shares."""
+        c = _as_ring(c, self.ring)
+        sh = self.shares.at[0].add(jnp.broadcast_to(c, self.shares.shape[1:]))
+        return RSS(sh, self.ring)
+
+    def mul_public_int(self, c):
+        """x * c for a public *integer* c (no truncation needed)."""
+        c = jnp.asarray(c).astype(self.ring.dtype)
+        return RSS(self.shares * c, self.ring)
+
+    def reshape(self, *shape):
+        return RSS(self.shares.reshape((PARTIES,) + tuple(shape)), self.ring)
+
+    def transpose(self, axes):
+        axes = (0,) + tuple(a + 1 for a in axes)
+        return RSS(self.shares.transpose(axes), self.ring)
+
+    def __getitem__(self, idx):
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        return RSS(self.shares[(slice(None),) + idx], self.ring)
+
+    def sum(self, axis, keepdims=False):
+        axis = axis if axis >= 0 else self.ndim + axis
+        return RSS(self.shares.sum(axis=axis + 1, keepdims=keepdims,
+                                   dtype=self.dtype), self.ring)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BinRSS:
+    """Binary (XOR) replicated secret shares of bits, values in {0,1}."""
+
+    shares: jax.Array  # (3, *shape) uint8
+
+    def tree_flatten(self):
+        return (self.shares,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @property
+    def shape(self):
+        return self.shares.shape[1:]
+
+    def party_view(self, i: int):
+        return self.shares[i], self.shares[(i + 1) % PARTIES]
+
+    def __xor__(self, other):
+        if isinstance(other, BinRSS):
+            return BinRSS(self.shares ^ other.shares)
+        # public bit: party 0 flips
+        b = jnp.asarray(other, jnp.uint8)
+        return BinRSS(self.shares.at[0].set(self.shares[0] ^ b))
+
+    def not_(self):
+        return self ^ jnp.uint8(1)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _as_ring(c, ring: RingSpec):
+    c = jnp.asarray(c)
+    if jnp.issubdtype(c.dtype, jnp.floating):
+        return ring.encode(c)
+    return c.astype(ring.dtype)
+
+
+def share(x, key, ring: RingSpec | None = None, encoded: bool = False) -> RSS:
+    """Secret-share a tensor. ``x`` is float (fixed-point encoded here) unless
+    ``encoded=True`` (already a ring element)."""
+    ring = ring or default_ring()
+    v = jnp.asarray(x)
+    v = v.astype(ring.dtype) if encoded else ring.encode(v)
+    k0, k1 = jax.random.split(key)
+    x0 = jax.random.bits(k0, v.shape, jnp.uint32).astype(ring.dtype)
+    x1 = jax.random.bits(k1, v.shape, jnp.uint32).astype(ring.dtype)
+    if ring.bits == 64:  # widen randomness
+        x0 = x0 | (jax.random.bits(jax.random.fold_in(k0, 1), v.shape,
+                                   jnp.uint32).astype(ring.dtype) << 32)
+        x1 = x1 | (jax.random.bits(jax.random.fold_in(k1, 1), v.shape,
+                                   jnp.uint32).astype(ring.dtype) << 32)
+    x2 = v - x0 - x1
+    return RSS(jnp.stack([x0, x1, x2]), ring)
+
+
+def reconstruct(x: RSS, decode: bool = True):
+    """Open shares. In deployment: each P_i sends one share to P_{i-1} —
+    accounted by protocols that *reveal*, not here (this is the test helper)."""
+    total = x.shares[0] + x.shares[1] + x.shares[2]
+    return x.ring.decode(total) if decode else total
+
+
+def share_bits(bits, key) -> BinRSS:
+    """XOR-share a {0,1} bit tensor."""
+    b = jnp.asarray(bits, jnp.uint8)
+    k0, k1 = jax.random.split(key)
+    b0 = jax.random.bits(k0, b.shape, jnp.uint8) & 1
+    b1 = jax.random.bits(k1, b.shape, jnp.uint8) & 1
+    b2 = b ^ b0 ^ b1
+    return BinRSS(jnp.stack([b0, b1, b2]))
+
+
+def reconstruct_bits(x: BinRSS):
+    return x.shares[0] ^ x.shares[1] ^ x.shares[2]
+
+
+def zeros_like_shares(x: RSS) -> RSS:
+    return RSS(jnp.zeros_like(x.shares), x.ring)

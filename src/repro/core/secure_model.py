@@ -1,0 +1,211 @@
+"""Secure inference executor: runs a trained (customized) BNN under the
+CBNN protocol stack (paper §3.2–3.6).
+
+Two phases, mirroring the deployment:
+
+  setup (model owner, plaintext):  walk the layer spec, apply the adaptive
+    fusing rules — BN→Sign folds into a shared threshold (eq. 8), BN→ReLU
+    folds into the preceding linear's (W, b) (eqs. 10–11) — then secret-share
+    the resulting weights.
+
+  infer (all parties):  data owner shares the input; every layer runs its
+    protocol: Alg 2 linear (+Π_trunc), Alg 3+4 Sign, Alg 3+5 ReLU, fused
+    Sign-maxpool (§3.6).  Sign activations travel as ±1 *integers* (scale 0),
+    so products after a Sign layer carry a single 2^f scale — the ring-32
+    fixed point stays inside the MSB-extraction bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.bnn import ALL_NETS, INPUT_SHAPES, L
+from . import comm
+from .activation import relu_from_msb, sign_from_msb
+from .linear import conv2d, linear_layer, matmul, reveal, truncate
+from .msb import msb_extract
+from .norm import fuse_bn_linear, fuse_bn_sign_threshold
+from .pooling import secure_maxpool, sign_maxpool_fused
+from .randomness import Parties
+from .ring import RingSpec, default_ring
+from .rss import RSS, share
+
+
+@dataclasses.dataclass
+class SecureModel:
+    ops: list
+    ring: RingSpec
+    net: str
+    comm_per_query: comm.CommLedger | None = None
+
+
+def _fold_bn(spec, params, i):
+    """Return (gamma', beta'-style fold targets) for bn layer i."""
+    return (np.asarray(params[f"l{i}_g"]), np.asarray(params[f"l{i}_beta"]),
+            np.asarray(params[f"l{i}_mu"]), np.asarray(params[f"l{i}_var"]))
+
+
+def compile_secure(params: dict, net: str, key,
+                   ring: RingSpec | None = None,
+                   use_kernel_dot: bool = False) -> SecureModel:
+    """Model-owner setup: fuse + share.  `params` are the trained plaintext
+    parameters (bnn.py layout)."""
+    ring = ring or default_ring()
+    spec = ALL_NETS[net]
+    ops: list[dict[str, Any]] = []
+    i = 0
+    kidx = 0
+
+    def nk():
+        nonlocal kidx
+        kidx += 1
+        return jax.random.fold_in(key, kidx)
+
+    while i < len(spec):
+        l = spec[i]
+        if l.kind in ("conv", "sepconv", "fc"):
+            if l.kind == "sepconv":
+                w_parts = [np.asarray(params[f"l{i}_dw"]),
+                           np.asarray(params[f"l{i}_pw"])]
+            else:
+                w_parts = [np.asarray(params[f"l{i}_w"])]
+            b = np.asarray(params[f"l{i}_b"])
+            # lookahead: bn (+ act) fusing
+            nxt = spec[i + 1] if i + 1 < len(spec) else None
+            nxt2 = spec[i + 2] if i + 2 < len(spec) else None
+            sign_threshold = None
+            if nxt is not None and nxt.kind == "bn":
+                g, beta, mu, var = _fold_bn(spec, params, i + 1)
+                gp = g / np.sqrt(var + 1e-5)
+                if nxt2 is not None and nxt2.kind == "act" \
+                        and nxt2.act == "sign" and np.all(gp > 0):
+                    # eq. 8: threshold shift, applied inside the Sign layer
+                    sign_threshold = fuse_bn_sign_threshold(g, beta, mu, var)
+                    i += 1  # consume bn
+                else:
+                    # eqs. 10-11: fold into (W, b) (ReLU / plain / γ'≤0 case)
+                    w_parts[-1], b = fuse_bn_linear(w_parts[-1], b, g, beta,
+                                                    mu, var)
+                    i += 1
+            op = {"op": l.kind, "k": l.k, "stride": l.stride, "pad": l.pad,
+                  "w": [share(w, nk(), ring) for w in w_parts],
+                  "b": share(b, nk(), ring),
+                  "sign_threshold": (share(sign_threshold, nk(), ring)
+                                     if sign_threshold is not None else None)}
+            ops.append(op)
+        elif l.kind == "act":
+            ops.append({"op": "sign" if l.act == "sign" else "relu"})
+        elif l.kind == "bn":
+            # un-fused BN (no preceding linear): affine via public-style op
+            g, beta, mu, var = _fold_bn(spec, params, i)
+            scale = g / np.sqrt(var + 1e-5)
+            shift = beta - mu * scale
+            ops.append({"op": "affine", "scale": share(scale, nk(), ring),
+                        "shift": share(shift, nk(), ring)})
+        elif l.kind == "maxpool":
+            ops.append({"op": "maxpool"})
+        elif l.kind == "flatten":
+            ops.append({"op": "flatten"})
+        i += 1
+    return SecureModel(ops=ops, ring=ring, net=net)
+
+
+def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
+                 reveal_output: bool = True):
+    """Run one secure inference. x_shares: RSS of (B,H,W,C) or (B,D)."""
+    ring = model.ring
+    h = x_shares
+    prev_sign = False  # is the current activation ±1-integer valued?
+    pending_sign_threshold = None
+
+    for idx, op in enumerate(model.ops):
+        kind = op["op"]
+        if kind in ("conv", "sepconv", "fc"):
+            # product scale: input(±1 int: 0 | fixed: f) + W(f) => f or 2f
+            if kind == "fc":
+                z = matmul(h, op["w"][0], parties, tag=f"l{idx}.fc")
+                at_2f = not prev_sign
+            elif kind == "conv":
+                z = conv2d(h, op["w"][0], parties, stride=op["stride"],
+                           padding=op["pad"], tag=f"l{idx}.conv")
+                at_2f = not prev_sign
+            else:  # separable: depthwise then pointwise (Alg 2 twice, Fig 3)
+                cin = int(h.shape[-1])
+                z = conv2d(h, op["w"][0], parties, stride=op["stride"],
+                           padding=op["pad"], groups=cin,
+                           tag=f"l{idx}.dwconv")
+                if not prev_sign:
+                    z = truncate(z, parties, tag=f"l{idx}.dwtrunc")
+                z = conv2d(z, op["w"][1], parties, tag=f"l{idx}.pwconv")
+                at_2f = True
+            bias = op["b"].shares.reshape((3,) + (1,) * (z.ndim - 1) + (-1,))
+            if at_2f:
+                bias = bias * jnp.asarray(ring.scale, ring.dtype)
+            z = RSS(z.shares + bias, ring)
+            if at_2f:
+                z = truncate(z, parties, tag=f"l{idx}.trunc")
+            h = z
+            prev_sign = False
+            pending_sign_threshold = op.get("sign_threshold")
+        elif kind == "sign":
+            if pending_sign_threshold is not None:
+                t = pending_sign_threshold
+                h = RSS(h.shares + t.shares.reshape(
+                    (3,) + (1,) * (h.ndim - 1) + (-1,)), ring)
+                pending_sign_threshold = None
+            msb = msb_extract(h, parties, tag=f"sign{idx}.msb")
+            bits = sign_from_msb(msb, parties, ring, tag=f"sign{idx}")
+            # keep {0,1} if maxpool follows (fused path); else lift to ±1
+            nxt = model.ops[idx + 1]["op"] if idx + 1 < len(model.ops) else None
+            if nxt == "maxpool":
+                h = bits  # §3.6 fusion consumes the indicator bits
+            else:
+                h = bits.mul_public_int(2).add_public(
+                    jnp.asarray(-1, ring.signed_dtype).astype(ring.dtype))
+            prev_sign = True
+        elif kind == "relu":
+            msb = msb_extract(h, parties, tag=f"relu{idx}.msb")
+            h = relu_from_msb(h, msb, parties, tag=f"relu{idx}")
+            prev_sign = False
+        elif kind == "affine":
+            from .linear import mul
+            h = truncate(mul(h, op["scale"], parties, tag=f"aff{idx}"),
+                         parties, tag=f"aff{idx}.tr")
+            h = h + op["shift"]
+            prev_sign = False
+        elif kind == "maxpool":
+            if prev_sign:
+                bits = sign_maxpool_fused(h, parties, tag=f"mp{idx}")
+                h = bits.mul_public_int(2).add_public(
+                    jnp.asarray(-1, ring.signed_dtype).astype(ring.dtype))
+                prev_sign = True
+            else:
+                h = secure_maxpool(h, parties, tag=f"mp{idx}")
+        elif kind == "flatten":
+            b = int(h.shape[0])
+            h = h.reshape(b, int(np.prod(h.shape[1:])))
+    if reveal_output:
+        return reveal(h, tag="output", decode=True)
+    return h
+
+
+def _bias_scale(ring: RingSpec, operand_is_int: bool):
+    """Bias lives at scale f; lift to 2f only when the product carries 2f."""
+    return (jnp.asarray(1, ring.dtype) if operand_is_int
+            else jnp.asarray(ring.scale, ring.dtype))
+
+
+def secure_infer_cost(model: SecureModel, input_shape,
+                      parties_key=None) -> comm.CommLedger:
+    """Trace-only communication ledger for one query batch."""
+    parties = Parties.setup(jax.random.PRNGKey(7))
+    x = jax.ShapeDtypeStruct((3,) + tuple(input_shape), model.ring.dtype)
+
+    def run(xs):
+        return secure_infer(model, RSS(xs, model.ring), parties)
+
+    return comm.estimate_cost(run, x)

@@ -1,0 +1,233 @@
+"""CBNN protocols applied to a transformer block (DESIGN.md §4).
+
+The paper's customization recipe carried to the LM families: every linear is
+Alg-2 RSS matmul (+Π_trunc), the attention softmax is replaced by the
+MPC-friendly ReLU-attention (ReLU(s)/L — only Alg 3+5 + a public multiply),
+FFN activation is secure ReLU, and RMSNorm uses the Newton-rsqrt substrate.
+An un-customized mode with full secure softmax exists for comparison; the
+benchmark (benchmarks/secure_lm.py) measures the comm/round gap — the same
+experiment shape as paper Table 2's customized-vs-typical comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import comm
+from .linear import matmul, matmul_truncate, mul, truncate, fused_rounds
+from .activation import secure_relu
+from .norm import secure_rmsnorm
+from .randomness import Parties
+from .ring import RingSpec, default_ring
+from .rss import RSS, share
+from .softmax import relu_attention_scores, secure_softmax
+
+
+@dataclasses.dataclass
+class SecureBlockParams:
+    wq: RSS
+    wk: RSS
+    wv: RSS
+    wo: RSS
+    w_up: RSS
+    w_down: RSS
+    g1: RSS
+    g2: RSS
+    n_heads: int
+    head_dim: int
+
+
+def share_block_params(key, d: int, n_heads: int, d_ff: int,
+                       ring: RingSpec | None = None,
+                       numpy_params: dict | None = None) -> SecureBlockParams:
+    """Model-owner setup: create (or take) plaintext weights and share them."""
+    ring = ring or default_ring()
+    hd = d // n_heads
+    rng = np.random.default_rng(0)
+    p = numpy_params or {
+        "wq": rng.normal(0, 1 / math.sqrt(d), (d, d)).astype(np.float32),
+        "wk": rng.normal(0, 1 / math.sqrt(d), (d, d)).astype(np.float32),
+        "wv": rng.normal(0, 1 / math.sqrt(d), (d, d)).astype(np.float32),
+        "wo": rng.normal(0, 1 / math.sqrt(d), (d, d)).astype(np.float32),
+        "w_up": rng.normal(0, 1 / math.sqrt(d), (d, d_ff)).astype(np.float32),
+        "w_down": rng.normal(0, 1 / math.sqrt(d_ff),
+                             (d_ff, d)).astype(np.float32),
+        "g1": np.ones((d,), np.float32),
+        "g2": np.ones((d,), np.float32),
+    }
+    ks = jax.random.split(key, 8)
+    shared_p = dict(p)
+    # fold the 1/√hd attention scale into W_q at setup (model-owner side,
+    # free) — a 3f-scaled product would overflow the 32-bit ring otherwise
+    shared_p["wq"] = p["wq"] / math.sqrt(hd)
+    sh = {k: share(v, kk, ring) for (k, v), kk in zip(shared_p.items(), ks)}
+    return SecureBlockParams(n_heads=n_heads, head_dim=hd, **sh), p
+
+
+def secure_block(x: RSS, bp: SecureBlockParams, parties: Parties,
+                 customized: bool = True, static_norm: bool = False,
+                 tag: str = "blk") -> RSS:
+    """One decoder block under RSS. x: (S, d) one sequence (simulation scale).
+
+    customized=True  -> ReLU-attention (paper's recipe; distillation recovers
+                        accuracy — see distill/).
+    customized=False -> full secure softmax (max/exp/reciprocal substrate).
+    static_norm=True -> CBNN-style norm customization: RMSNorm is replaced at
+                        training time by a *static* per-channel scale (the
+                        model owner folds g·ĉ into the next linear's weights,
+                        so the online cost is ZERO rounds); accuracy is
+                        recovered by distillation, exactly the paper's recipe
+                        for MPC-hostile ops.  §Perf iteration 3.
+    """
+    ring = x.ring
+    s = int(x.shape[0])
+    h, hd = bp.n_heads, bp.head_dim
+    d = h * hd
+
+    def lin(inp, w, t):
+        if fused_rounds():  # beyond-paper: matmul+trunc in one round
+            return matmul_truncate(inp, w, parties, tag=t)
+        return truncate(matmul(inp, w, parties, tag=t), parties,
+                        tag=t + ".tr")
+
+    def norm(v, g, t):
+        if static_norm:
+            return v  # scale folded into the following linear at setup
+        return secure_rmsnorm(v, g, parties, tag=t)
+
+    hin = norm(x, bp.g1, tag + ".norm1")
+    q = lin(hin, bp.wq, tag + ".wq")
+    k = lin(hin, bp.wk, tag + ".wk")
+    v = lin(hin, bp.wv, tag + ".wv")
+
+    # per-head scores: (h, S, S); the 1/√hd scale is pre-folded into W_q
+    qh = q.reshape(s, h, hd).transpose((1, 0, 2))   # (h, S, hd)
+    kh = k.reshape(s, h, hd).transpose((1, 2, 0))   # (h, hd, S)
+    scores = _bmm(qh, kh, parties, tag=tag + ".qk", fuse_trunc=True)
+
+    # causal mask: public structure — parties zero the upper triangle locally
+    mask = jnp.tril(jnp.ones((s, s), ring.dtype))
+    if customized:
+        probs = relu_attention_scores(scores, s, parties, tag=tag + ".reluattn")
+        probs = RSS(probs.shares * mask[None, None], ring)
+    else:
+        neg = ring.encode(jnp.float32(-16.0))
+        masked = RSS(scores.shares * mask[None, None], ring).add_public(
+            jnp.where(mask == 0, neg, jnp.asarray(0, ring.dtype)).astype(ring.dtype))
+        probs = secure_softmax(masked, parties, tag=tag + ".softmax")
+
+    vh = v.reshape(s, h, hd).transpose((1, 0, 2))   # (h, S, hd)
+    ctx = _bmm(probs, vh, parties, tag=tag + ".av", fuse_trunc=True)
+    ctx = ctx.transpose((1, 0, 2)).reshape(s, d)
+    attn_out = lin(ctx, bp.wo, tag + ".wo")
+    x = x + attn_out
+
+    hin2 = norm(x, bp.g2, tag + ".norm2")
+    up = lin(hin2, bp.w_up, tag + ".up")
+    act = secure_relu(up, parties, tag=tag + ".relu")
+    down = lin(act, bp.w_down, tag + ".down")
+    return x + down
+
+
+def _bmm(a: RSS, b: RSS, parties: Parties, tag: str,
+         fuse_trunc: bool = False) -> RSS:
+    """Batched secure matmul over a leading head axis: (h,S,K)x(h,K,T);
+    optionally with the one-round fused truncation."""
+    from .linear import _reshare, truncate as _trunc
+    ring = a.ring
+    xs, ys = a.shares, b.shares
+    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
+
+    def dot(p, q):
+        return jnp.einsum("hsk,hkt->hst", p, q,
+                          preferred_element_type=ring.dtype)
+
+    z = jnp.stack([dot(xs[i], ys[i] + yn[i]) + dot(xn[i], ys[i])
+                   for i in range(3)])
+    if not fuse_trunc:
+        return _reshare(z, ring, parties, tag)
+    if not fused_rounds():
+        return _trunc(_reshare(z, ring, parties, tag), parties,
+                      tag=tag + ".tr")
+    # fused: broadcast masked additive parts, open, shift (1 round)
+    z = z + parties.zero_shares(z.shape[1:], ring)
+    r = parties.rand_rss(z.shape[1:], ring, max_bits=ring.bits - 1)
+    rp = RSS(r.shares >> ring.frac, ring)
+    offset = jnp.asarray(1 << (ring.bits - 2), ring.dtype)
+    c_parts = z - r.shares
+    n = 1
+    for dd in z.shape[1:]:
+        n *= int(dd)
+    comm.record(tag + ".fused", rounds=1, nbytes=6 * n * ring.nbytes)
+    c = c_parts[0] + c_parts[1] + c_parts[2] + offset
+    c_shift = (ring.to_signed(c) >> ring.frac).astype(ring.dtype)
+    public = c_shift - jnp.asarray(1 << (ring.bits - 2 - ring.frac),
+                                   ring.dtype) + jnp.asarray(1, ring.dtype)
+    return rp.add_public(public)
+
+
+def plaintext_block(x, p, n_heads: int, customized: bool = True,
+                    static_norm: bool = False):
+    """fp32 oracle matching secure_block's computation graph."""
+    s, d = x.shape
+    hd = d // n_heads
+
+    def rms(v, g):
+        if static_norm:
+            return v
+        return v / np.sqrt((v * v).mean(-1, keepdims=True) + 1e-5) * g
+
+    hin = rms(x, p["g1"])
+    q = (hin @ p["wq"]).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    k = (hin @ p["wk"]).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    v = (hin @ p["wv"]).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    scores = q @ k.transpose(0, 2, 1) / math.sqrt(hd)
+    mask = np.tril(np.ones((s, s)))
+    if customized:
+        probs = np.maximum(scores, 0) / s * mask[None]
+    else:
+        sm = np.where(mask[None] > 0, scores, -16.0)
+        e = np.exp(sm - sm.max(-1, keepdims=True))
+        probs = e / e.sum(-1, keepdims=True)
+    ctx = (probs @ v).transpose(1, 0, 2).reshape(s, d)
+    x = x + ctx @ p["wo"]
+    hin2 = rms(x, p["g2"])
+    ffn = np.maximum(hin2 @ p["w_up"], 0) @ p["w_down"]
+    return x + ffn
+
+
+def block_comm_profile(seq: int = 16, d: int = 64, heads: int = 4,
+                       d_ff: int = 128):
+    """§Perf measurement helper: (variant -> ledger) across the protocol
+    optimization ladder."""
+    import jax as _jax
+    from .comm import estimate_cost
+    from .linear import set_fused_rounds, set_matmul_mode
+
+    bp, _ = share_block_params(_jax.random.PRNGKey(0), d, heads, d_ff)
+    x = np.zeros((seq, d), np.float32)
+    xs = share(x, _jax.random.PRNGKey(1))
+    out = {}
+    variants = [
+        ("paper_softmax", dict(customized=False), False, "paper3"),
+        ("paper_softmax_opt2", dict(customized=False), False, "opt2"),
+        ("customized", dict(customized=True), False, "opt2"),
+        ("customized_fused", dict(customized=True), True, "opt2"),
+        ("customized_fused_staticnorm",
+         dict(customized=True, static_norm=True), True, "opt2"),
+    ]
+    for name, kw, fused, mode in variants:
+        set_fused_rounds(fused)
+        set_matmul_mode(mode)
+        try:
+            out[name] = estimate_cost(
+                lambda s_: secure_block(
+                    s_, bp, Parties.setup(_jax.random.PRNGKey(9)), **kw), xs)
+        finally:
+            set_fused_rounds(False)
+            set_matmul_mode("opt2")
+    return out

@@ -1,0 +1,1 @@
+from .synthetic import (image_dataset, token_stream, IMAGE_DATASETS)

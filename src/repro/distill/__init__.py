@@ -1,0 +1,1 @@
+from .kd import kd_loss, train_bnn, evaluate, TrainResult

@@ -1,0 +1,103 @@
+"""Knowledge distillation (paper §2.2) + BNN training loop.
+
+Loss (paper eq. 5):  L = λ·H_stu(y, q) + (1−λ)·H_tea(p^T, q^T)
+with temperature-T softened teacher targets; the customized (binarized,
+separable-conv) student recovers the accuracy the MPC-friendly surgery
+costs — the paper's central customization claim (Figs. 5/6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn import bnn
+from ..optim import OptConfig, adamw_init, adamw_update
+
+
+def kd_loss(student_logits, labels, teacher_logits=None, lam: float = 1.0,
+            temperature: float = 10.0):
+    """λ=1 → plain CE (no KD); λ<1 mixes the distillation term."""
+    logp = jax.nn.log_softmax(student_logits)
+    hard = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    if teacher_logits is None or lam >= 1.0:
+        return hard
+    t = temperature
+    p_t = jax.nn.softmax(teacher_logits / t)
+    logq_t = jax.nn.log_softmax(student_logits / t)
+    soft = -(p_t * logq_t).sum(-1).mean() * (t * t)
+    return lam * hard + (1.0 - lam) * soft
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: dict
+    history: list          # (epoch, train_loss, test_acc)
+    param_count: int
+
+
+def evaluate(params, net, x, y, batch: int = 256, binarize=True) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits, _ = bnn.bnn_forward(params, jnp.asarray(x[i:i + batch]), net,
+                                    train=False, binarize=binarize)
+        correct += int((np.argmax(np.asarray(logits), -1)
+                        == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+def train_bnn(net: str, data, *, epochs: int = 3, batch: int = 128,
+              lr: float = 2e-3, lam: float = 1.0, temperature: float = 10.0,
+              teacher=None, binarize: bool = True, seed: int = 0,
+              bn_momentum: float = 0.9) -> TrainResult:
+    """Train a (possibly binarized) net; optional KD from `teacher`
+    = (teacher_params, teacher_net)."""
+    x_tr, y_tr, x_te, y_te = data
+    params = bnn.init_bnn(jax.random.PRNGKey(seed), net)
+    opt = adamw_init(params)
+    ocfg = OptConfig(lr=lr, weight_decay=1e-4, warmup_steps=20,
+                     grad_clip=5.0)
+
+    def loss_fn(p, xb, yb, tlogits):
+        logits, stats = bnn.bnn_forward(p, xb, net, train=True,
+                                        binarize=binarize)
+        return kd_loss(logits, yb, tlogits, lam, temperature), stats
+
+    @jax.jit
+    def step(p, o, xb, yb, tlogits):
+        (l, stats), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            p, xb, yb, tlogits)
+        p2, o2, _ = adamw_update(p, g, o, ocfg)
+        # running BN stats updated outside the gradient path
+        for k2, v in stats.items():
+            p2[k2] = bn_momentum * p2[k2] + (1 - bn_momentum) * v
+        return p2, o2, l
+
+    @jax.jit
+    def teacher_logits_fn(tp, xb, tnet_static=None):
+        lg, _ = bnn.bnn_forward(tp, xb, teacher[1], train=False,
+                                binarize=False)
+        return lg
+
+    rng = np.random.default_rng(seed)
+    hist = []
+    n = len(x_tr)
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            xb = jnp.asarray(x_tr[idx])
+            yb = jnp.asarray(y_tr[idx])
+            tl = (teacher_logits_fn(teacher[0], xb)
+                  if teacher is not None and lam < 1.0 else
+                  jnp.zeros((len(idx), 10)))
+            params, opt, l = step(params, opt, xb, yb,
+                                  tl if teacher is not None and lam < 1.0
+                                  else None)
+            losses.append(float(l))
+        acc = evaluate(params, net, x_te, y_te, binarize=binarize)
+        hist.append((ep, float(np.mean(losses)), acc))
+    return TrainResult(params, hist, bnn.param_count(params))

@@ -1,0 +1,82 @@
+"""jit'd public wrappers for the Pallas kernels + padding/shape handling.
+
+These are the entry points the rest of the framework uses; each dispatches
+to the kernel (interpret-mode on CPU, compiled on TPU) and falls back to the
+pure-jnp oracle for shapes below the tiling threshold.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .binary_matmul import binary_binary_matmul, binary_weight_matmul
+from .flash_attention import flash_attention
+from .ring_matmul import ring_matmul
+
+_MIN_TILE = 128
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def ring_matmul_op(a: jax.Array, b: jax.Array, *,
+                   use_kernel: bool = True) -> jax.Array:
+    """C = A @ B mod 2^32 for arbitrary (M,K)x(K,N); pads to 128 tiles."""
+    if not use_kernel or min(a.shape + b.shape) < 8:
+        return ref.ring_matmul_ref(a, b)
+    a2, pm = _pad_to(a, _MIN_TILE, 0)
+    a2, pk = _pad_to(a2, _MIN_TILE, 1)
+    b2, _ = _pad_to(b, _MIN_TILE, 0)
+    b2, pn = _pad_to(b2, _MIN_TILE, 1)
+    out = ring_matmul(a2, b2)
+    return out[:a.shape[0], :b.shape[1]]
+
+
+def binary_weight_matmul_op(a: jax.Array, w: jax.Array, *,
+                            use_kernel: bool = True) -> jax.Array:
+    """A (uint32 ring) @ W (int8 ±1 / {0,1}) mod 2^32."""
+    if not use_kernel or min(a.shape + w.shape) < 8:
+        return ref.binary_weight_matmul_ref(a, w)
+    a2, _ = _pad_to(a, _MIN_TILE, 0)
+    a2, _ = _pad_to(a2, _MIN_TILE, 1)
+    w2, _ = _pad_to(w, _MIN_TILE, 0)
+    w2, _ = _pad_to(w2, _MIN_TILE, 1)
+    out = binary_weight_matmul(a2, w2)
+    return out[:a.shape[0], :w.shape[1]]
+
+
+def binary_binary_matmul_op(a: jax.Array, w: jax.Array, *,
+                            use_kernel: bool = True) -> jax.Array:
+    if not use_kernel or min(a.shape + w.shape) < 8:
+        return ref.binary_binary_matmul_ref(a, w)
+    a2, _ = _pad_to(a, _MIN_TILE, 0)
+    a2, _ = _pad_to(a2, _MIN_TILE, 1)
+    w2, _ = _pad_to(w, _MIN_TILE, 0)
+    w2, _ = _pad_to(w2, _MIN_TILE, 1)
+    out = binary_binary_matmul(a2, w2)
+    return out[:a.shape[0], :w.shape[1]]
+
+
+def flash_attention_op(q, k, v, *, bq: int = 128, bk: int = 128):
+    """Causal GQA flash attention; falls back to the oracle when seq is not
+    tile-divisible (ragged prefill uses the reference path)."""
+    s = q.shape[1]
+    if s % bq or s % bk or bq % bk:
+        return ref.flash_attention_ref(q, k, v, causal=True)
+    return flash_attention(q, k, v, bq=bq, bk=bk)
+
+
+def rss_matmul_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Drop-in `dot` for core.linear.matmul — routes RSS linear layers
+    through the limb-decomposed MXU kernel (folds leading batch dims)."""
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    out = ring_matmul_op(a2, b)
+    return out.reshape(lead + (b.shape[-1],))

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: matmul over Z_{2^32} via limb-decomposed int8 MXU dots.
+
+TPU adaptation of CBNN's ring linear algebra (DESIGN.md §3): the MXU has no
+mod-2^32 matmul, but it natively does int8×int8→int32.  Each uint32 operand
+is decomposed into 4 *balanced* signed 8-bit limbs (digits ∈ [−128,127],
+carry-corrected, exact mod 2^32), and
+
+    C = A·B  ≡  Σ_{p+q ≤ 3} (A_p · B_q) · 2^{8(p+q)}   (mod 2^32)
+
+— only 10 of 16 limb products survive the modulus.  int32 accumulator
+wraparound *is* mod-2^32 arithmetic, so any contraction depth K is exact.
+
+Grid: (M/bm, N/bn, K/bk), K innermost (revisiting the same output block);
+blocks live in VMEM, MXU dims 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_LIMBS = 4
+
+
+def balanced_limbs(x: jax.Array) -> jax.Array:
+    """uint32 (...) -> int8 (4, ...) with x ≡ Σ limb_p · 2^{8p} (mod 2^32)."""
+    limbs = []
+    cur = x.astype(jnp.uint32)
+    for _ in range(N_LIMBS):
+        lo = (cur & jnp.uint32(0xFF)).astype(jnp.int32)
+        carry = (lo >= 128).astype(jnp.uint32)
+        lo = lo - 256 * (lo >= 128).astype(jnp.int32)
+        limbs.append(lo.astype(jnp.int8))
+        cur = (cur >> 8) + carry
+    return jnp.stack(limbs)
+
+
+def _ring_matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """a_ref: (4, bm, bk) int8; b_ref: (4, bk, bn) int8; o_ref: (bm, bn) u32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.zeros(o_ref.shape, jnp.uint32)
+    for p in range(N_LIMBS):
+        for q in range(N_LIMBS - p):
+            prod = jax.lax.dot_general(
+                a_ref[p], b_ref[q], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc = acc + (prod.astype(jnp.uint32) << (8 * (p + q)))
+    o_ref[...] = o_ref[...] + acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def ring_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+                bk: int = 128, interpret: bool = True) -> jax.Array:
+    """C = A @ B mod 2^32.  a: (M, K) uint32, b: (K, N) uint32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bk},{bn})"
+
+    al = balanced_limbs(a)          # (4, M, K) int8
+    bl = balanced_limbs(b)          # (4, K, N) int8
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_ring_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N_LIMBS, bm, bk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((N_LIMBS, bk, bn), lambda i, j, kk: (0, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        interpret=interpret,
+    )(al, bl)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (one head per grid row).
+
+The intra-chunk matrix form is MXU-shaped ((Q,N)x(N,Q), (Q,Q)x(Q,hd)); the
+inter-chunk state (hd, N) lives in VMEM scratch and persists across the
+sequential chunk axis of the grid (TPU grids execute in order; pallas
+scratch carries state between iterations of the same (b, h) row).
+
+Grid: (B, H, n_chunks) — chunks innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, da_ref, dt_ref, o_ref, state_ref, *,
+                q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, hd)
+    b = b_ref[0].astype(jnp.float32)             # (Q, N)
+    c = c_ref[0].astype(jnp.float32)             # (Q, N)
+    da = da_ref[0, 0].astype(jnp.float32)        # (Q,)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+
+    cum = jnp.cumsum(da)                          # (Q,)
+    li = cum[:, None] - cum[None, :]
+    mask = jax.lax.iota(jnp.int32, q)[:, None] >= \
+        jax.lax.iota(jnp.int32, q)[None, :]
+    decay = jnp.where(mask, jnp.exp(li), 0.0)     # (Q, Q)
+    scores = (c @ b.T) * decay                    # (Q, Q)
+    xdt = x * dt[:, None]                         # (Q, hd)
+    y = scores @ xdt                              # intra-chunk
+
+    state = state_ref[...].astype(jnp.float32)    # (hd, N)
+    y = y + (c @ state.T) * jnp.exp(cum)[:, None]
+
+    tail = jnp.exp(cum[-1] - cum)                 # (Q,)
+    state_new = state * jnp.exp(cum[-1]) + (xdt * tail[:, None]).T @ b
+    state_ref[...] = state_new.astype(state_ref.dtype)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, bmat, cmat, da, dt, *, chunk: int = 64,
+             interpret: bool = True):
+    """x: (B,S,H,hd), bmat/cmat: (B,S,N), da/dt: (B,S,H) -> y: (B,S,H,hd).
+
+    Shared B/C across heads (Mamba-2's multi-value attention analogy).
+    S must be divisible by `chunk`.
+    """
+    bsz, s, h, hd = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xt = x.transpose(0, 2, 1, 3)                  # (B,H,S,hd)
+    dat = da.transpose(0, 2, 1)                   # (B,H,S)
+    dtt = dt.transpose(0, 2, 1)
+
+    grid = (bsz, h, nc)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, s, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, bmat, cmat, dat, dtt)
+    return out.transpose(0, 2, 1, 3)

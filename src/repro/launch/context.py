@@ -1,0 +1,62 @@
+"""Ambient sharding plan for model-internal sharding hints.
+
+Model code calls ``shard_hint(x, "batch", None, "model")`` with *logical*
+axis names; when a Plan is active (set by the launcher / dry-run) these map
+to mesh axes and become with_sharding_constraint; with no plan active the
+call is a no-op, so single-device tests and examples run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_PLAN = contextvars.ContextVar("repro_plan", default=None)
+
+
+@contextlib.contextmanager
+def use_plan(plan):
+    tok = _PLAN.set(plan)
+    try:
+        yield
+    finally:
+        _PLAN.reset(tok)
+
+
+def current_plan():
+    return _PLAN.get()
+
+
+def _resolve(plan, logical):
+    if logical is None:
+        return None
+    if logical == "batch":
+        ax = plan.batch_axes
+        return ax if len(ax) > 1 else ax[0]
+    if logical == "seq":
+        return "model"
+    return logical  # "model", "data" pass through
+
+
+def shard_hint(x, *logical_axes):
+    plan = _PLAN.get()
+    if plan is None:
+        return x
+    if x.ndim != len(logical_axes):
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, logical_axes):
+        mesh_ax = _resolve(plan, ax)
+        if mesh_ax is None:
+            spec.append(None)
+            continue
+        size = (plan.mesh.shape[mesh_ax] if isinstance(mesh_ax, str)
+                else 1)
+        if not isinstance(mesh_ax, str):
+            for a in mesh_ax:
+                size *= plan.mesh.shape[a]
+        spec.append(mesh_ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, P(*spec)))

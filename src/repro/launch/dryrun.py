@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on the
+production mesh with ShapeDtypeStruct inputs (no allocation), then record
+memory/cost/collective analysis for the roofline report.
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks on
+first backend init); run this module as a script or via launch/farm.py —
+never import it from test code (tests expect 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single --out results/
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, all_configs, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.launch.context import use_plan
+from repro.roofline.analyze import (collective_bytes_from_hlo, roofline_terms,
+                                    summarize_memory)
+
+
+def dryrun_cell(arch: str, shape: str, mesh_kind: str,
+                variant: str = "baseline", dispatch: str | None = None,
+                ssd_chunk: int = 0, opt_state_dtype: str = "",
+                moe_impl: str = "", no_remat: bool = False) -> dict:
+    if dispatch:
+        from repro.nn.moe import set_dispatch_mode
+        set_dispatch_mode(dispatch)
+    if moe_impl:
+        from repro.nn.moe import set_moe_impl
+        set_moe_impl(moe_impl)
+    cfg = get_config(arch)
+    import dataclasses as _dc
+    if ssd_chunk:
+        cfg = _dc.replace(cfg, ssd_chunk=ssd_chunk)
+    if no_remat:
+        cfg = _dc.replace(cfg, remat=False)
+    ok, reason = cfg.shape_supported(shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "variant": variant, "ts": time.time()}
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    plan = mesh_lib.Plan(mesh)
+    kind = SHAPES[shape]["kind"]
+    from repro.optim import OptConfig
+    opt_cfg = OptConfig(state_dtype=opt_state_dtype or "fp32")
+    batch = steps_lib.input_specs(cfg, shape)
+    params, aux = steps_lib.abstract_state(cfg, shape, opt_cfg)
+
+    sh = lambda spec_tree: mesh_lib.to_shardings(spec_tree, plan)
+    p_specs = sh(mesh_lib.param_specs(params, plan))
+    b_specs = sh(mesh_lib.batch_specs(batch, plan))
+
+    t0 = time.time()
+    with mesh, use_plan(plan):
+        if kind == "train":
+            step = steps_lib.make_train_step(cfg, opt_cfg)
+            o_specs = sh(mesh_lib.opt_specs(aux,
+                                            mesh_lib.param_specs(params, plan)))
+            jitted = jax.jit(step,
+                             in_shardings=(p_specs, o_specs, b_specs),
+                             out_shardings=(p_specs, o_specs, sh(P())),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params, aux, batch)
+        elif kind == "prefill":
+            step = steps_lib.make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_specs, b_specs),
+                             out_shardings=sh(P(plan.batch_spec_axes(
+                                 SHAPES[shape]["global_batch"]), None)))
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            step = steps_lib.make_decode_step(cfg)
+            c_specs = sh(mesh_lib.cache_specs(aux, plan))
+            jitted = jax.jit(step,
+                             in_shardings=(p_specs, c_specs, b_specs),
+                             out_shardings=(sh(P()), c_specs),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, aux, batch)
+        t_lower = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = collective_bytes_from_hlo(hlo)
+
+    n_chips = mesh.devices.size
+    rec.update(
+        status="OK",
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        n_chips=n_chips,
+        memory=summarize_memory(mem),
+        flops_per_chip=float(cost.get("flops", -1.0)) if cost else -1.0,
+        bytes_per_chip=float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        collectives=colls,
+        roofline=roofline_terms(cfg, shape, cost, colls, n_chips),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--dispatch", default=None, choices=[None, "sort", "cumsum"])
+    ap.add_argument("--ssd-chunk", type=int, default=0)
+    ap.add_argument("--opt-dtype", default="", choices=["", "fp32", "int8"])
+    ap.add_argument("--moe-impl", default="", choices=["", "dense", "shardmap"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{args.arch}__{args.shape}__{args.mesh}__{args.variant}.json"
+
+    try:
+        rec = dryrun_cell(args.arch, args.shape, args.mesh, args.variant,
+                          dispatch=args.dispatch, ssd_chunk=args.ssd_chunk,
+                          opt_state_dtype=args.opt_dtype,
+                          moe_impl=args.moe_impl, no_remat=args.no_remat)
+    except Exception as e:  # a failed cell is a bug report, not a crash
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "variant": args.variant, "status": "FAIL",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+
+    (out_dir / name).write_text(json.dumps(rec, indent=2))
+    print(json.dumps({k: v for k, v in rec.items() if k != "trace"},
+                     indent=2))
+    if rec["status"] == "FAIL":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

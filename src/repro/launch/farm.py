@@ -1,0 +1,99 @@
+"""Resumable dry-run farm: every (arch × shape × mesh) cell as a subprocess.
+
+Each cell runs in a fresh process (jax locks the fake-device count at first
+init, and a failed compile must not poison later cells).  Results land in
+results/<cell>.json; cells with an OK/SKIP result are not re-run, so the
+farm can be stopped and resumed freely (fault-tolerant by construction).
+
+  PYTHONPATH=src python -m repro.launch.farm --out results [--mesh both]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, SHAPES
+
+# cheap-first ordering: catch systematic bugs before burning hours on 671B
+ARCH_ORDER = [
+    "tinyllama-1.1b", "mamba2-1.3b", "phi3-mini-3.8b", "minitron-4b",
+    "hubert-xlarge", "pixtral-12b", "jamba-v0.1-52b", "deepseek-67b",
+    "deepseek-v2-236b", "deepseek-v3-671b",
+]
+SHAPE_ORDER = ["train_4k", "decode_32k", "prefill_32k", "long_500k"]
+
+
+def cells(meshes):
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in meshes:
+                yield arch, shape, mesh
+
+
+def run_farm(out: str, meshes, variant: str = "baseline",
+             timeout_s: int = 3600):
+    out_dir = Path(out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    todo = list(cells(meshes))
+    done = ok = skip = fail = 0
+    t_start = time.time()
+    for arch, shape, mesh in todo:
+        name = f"{arch}__{shape}__{mesh}__{variant}.json"
+        path = out_dir / name
+        if path.exists():
+            try:
+                rec = json.loads(path.read_text())
+                if rec.get("status") in ("OK", "SKIP"):
+                    done += 1
+                    continue
+            except json.JSONDecodeError:
+                pass
+        print(f"[farm +{time.time()-t_start:7.0f}s] {arch} {shape} {mesh} ...",
+              flush=True)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--variant", variant, "--out", str(out_dir)]
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=timeout_s)
+            if r.returncode != 0 and not path.exists():
+                path.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "mesh": mesh,
+                     "variant": variant, "status": "FAIL",
+                     "error": (r.stderr or r.stdout)[-3000:]}, indent=2))
+        except subprocess.TimeoutExpired:
+            path.write_text(json.dumps(
+                {"arch": arch, "shape": shape, "mesh": mesh,
+                 "variant": variant, "status": "FAIL",
+                 "error": f"timeout after {timeout_s}s"}, indent=2))
+        rec = json.loads(path.read_text())
+        st = rec.get("status")
+        ok += st == "OK"
+        skip += st == "SKIP"
+        fail += st == "FAIL"
+        print(f"    -> {st} "
+              + (f"compile={rec.get('compile_s')}s" if st == "OK"
+                 else rec.get("reason", rec.get("error", ""))[:160]),
+              flush=True)
+    print(f"[farm] done: pre-existing={done} ok={ok} skip={skip} fail={fail}",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    run_farm(args.out, meshes, args.variant, args.timeout)
+
+
+if __name__ == "__main__":
+    main()

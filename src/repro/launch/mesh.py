@@ -1,0 +1,204 @@
+"""Production mesh + partition-spec rules (DP/FSDP + TP/EP + pod-DP).
+
+Sharding scheme (DESIGN.md §6):
+  * batch        -> ("pod", "data")   (as divisibility allows)
+  * param matrices -> 2-D sharded: one dim over "data" (FSDP storage, gathered
+    per layer inside the scan) and one over "model" (Megatron-style TP; MoE
+    experts shard their E axis over "model" = expert parallelism)
+  * optimizer state -> param spec (ZeRO-1 comes free: the FSDP "data" axis is
+    already in the param spec, so m/v are fully sharded)
+  * KV caches   -> batch over "data", sequence over "model" (ring-style)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Axis-name view of the ambient mesh."""
+    mesh: Mesh
+
+    @property
+    def has_pod(self) -> bool:
+        return "pod" in self.mesh.axis_names
+
+    @property
+    def data_size(self) -> int:
+        return self.mesh.shape["data"]
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape["model"]
+
+    @property
+    def batch_axes(self) -> tuple:
+        return ("pod", "data") if self.has_pod else ("data",)
+
+    @property
+    def batch_size_div(self) -> int:
+        n = self.data_size
+        if self.has_pod:
+            n *= self.mesh.shape["pod"]
+        return n
+
+    def batch_spec_axes(self, b: int):
+        """Largest batch sharding the divisibility allows."""
+        if b % self.batch_size_div == 0:
+            ax = self.batch_axes
+            return ax if len(ax) > 1 else ax[0]
+        if b % self.data_size == 0:
+            return "data"
+        return None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Param partition rules
+# ---------------------------------------------------------------------------
+
+# name -> (rank-without-L) -> trailing spec (L gets None in front for stacks)
+_IN_MATS = {"wq", "wk", "wv", "w_up", "w_gate", "w_in", "w_dq", "w_uq",
+            "w_uk", "w_uv", "w_dkv", "w_kr", "router"}
+_OUT_MATS = {"wo", "w_down", "w_out"}
+_HEAD_VECS = {"A_log", "D", "dt_bias", "norm_g"}
+
+
+def _leaf_spec(name: str, rank: int, shape, plan: Plan) -> P:
+    def fits(dim_idx, axis_size):
+        return shape[dim_idx] % axis_size == 0
+
+    d, m = plan.data_size, plan.model_size
+    if name == "embed":
+        return P("model", "data") if fits(0, m) and fits(1, d) else P()
+    if name == "head":
+        return P("data", "model") if fits(0, d) and fits(1, m) else P()
+    if name in ("front_proj", "mtp_proj"):
+        return P("data", "model") if fits(0, d) and fits(1, m) else P()
+
+    if name in _IN_MATS:
+        if rank == 4:  # (L, E, din, dout) MoE expert stack
+            sp = ["model" if fits(1, m) else None,
+                  "data" if fits(2, d) else None, None]
+            return P(None, *sp)
+        if rank == 3:  # (L, din, dout)
+            return P(None, "data" if fits(1, d) else None,
+                     "model" if fits(2, m) else None)
+        if rank == 2:  # unstacked
+            return P("data" if fits(0, d) else None,
+                     "model" if fits(1, m) else None)
+    if name in _OUT_MATS:
+        if rank == 4:  # (L, E, dff, d)
+            return P(None, "model" if fits(1, m) else None, None,
+                     "data" if fits(3, d) else None)
+        if rank == 3:
+            return P(None, "model" if fits(1, m) else None,
+                     "data" if fits(2, d) else None)
+        if rank == 2:
+            return P("model" if fits(0, m) else None,
+                     "data" if fits(1, d) else None)
+    if name == "conv_w" and rank == 3:  # (L, K, C)
+        return P(None, None, "model" if fits(2, m) else None)
+    if name in _HEAD_VECS and rank == 2:  # (L, H) / (L, d_inner)
+        return P(None, "model" if fits(1, m) else None)
+    return P()  # replicated (norm vectors, scalars, tiny leaves)
+
+
+def to_shardings(spec_tree, plan: Plan):
+    """PartitionSpec pytree -> NamedSharding pytree on the plan's mesh."""
+    return jax.tree.map(lambda s: NamedSharding(plan.mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(params_tree, plan: Plan):
+    """PartitionSpec pytree mirroring a params pytree (by leaf path name)."""
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        return _leaf_spec(name or "", leaf.ndim, leaf.shape, plan)
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def opt_specs(opt_state_tree, p_specs):
+    """ZeRO-1: optimizer moments inherit the (already fully-sharded) param
+    specs; the scalar step is replicated.  int8-quantized moments
+    ({q8/qu8, s8/su8} leaf dicts) shard the payload like the param and the
+    per-row scales like the param minus its last axis."""
+    def _is_q(x):
+        return isinstance(x, dict) and ("q8" in x or "qu8" in x)
+
+    def moment_spec(leaf, ps):
+        if not _is_q(leaf):
+            return ps
+        scale_spec = P(*(tuple(ps)[:-1] + (None,))) if len(ps) else P()
+        out = {}
+        for k in leaf:
+            out[k] = ps if k in ("q8", "qu8") else scale_spec
+        return out
+
+    def build(moments):
+        return jax.tree.map(moment_spec, moments, p_specs, is_leaf=_is_q)
+
+    return {"m": build(opt_state_tree["m"]),
+            "v": build(opt_state_tree["v"]), "step": P()}
+
+
+def batch_specs(batch_tree, plan: Plan):
+    def spec(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        ax = plan.batch_spec_axes(b)
+        if leaf.ndim == 0:
+            return P()
+        return P(ax, *([None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_specs(cache_tree, plan: Plan):
+    """KV caches: (L, B, S, ...) -> batch over data, seq over model."""
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        shape = leaf.shape
+        if name in ("k", "v", "c_kv", "k_rope"):
+            # (L, B, S, ...) — seq over model
+            sp = [None, "data" if shape[1] % plan.data_size == 0 else None,
+                  "model" if shape[2] % plan.model_size == 0 else None]
+            return P(*sp, *([None] * (leaf.ndim - 3)))
+        if name == "state":  # (L, B, H, hd, N)
+            return P(None,
+                     "data" if shape[1] % plan.data_size == 0 else None,
+                     "model" if shape[2] % plan.model_size == 0 else None,
+                     None, None)
+        if name == "conv":  # (L, B, K-1, C)
+            return P(None,
+                     "data" if shape[1] % plan.data_size == 0 else None,
+                     None,
+                     "model" if shape[3] % plan.model_size == 0 else None)
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

@@ -1,0 +1,94 @@
+"""Step functions (train / prefill / decode) + abstract input specs.
+
+Everything here is buildable both concretely (examples, smoke tests) and
+abstractly (ShapeDtypeStruct only — the multi-pod dry-run path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ArchConfig, SHAPES
+from ..nn import transformer as tfm
+from ..nn.layers import COMPUTE_DTYPE
+from ..optim import OptConfig, adamw_init, adamw_update
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per (arch, shape-cell)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    info = SHAPES[shape_name]
+    b, s, kind = info["global_batch"], info["seq_len"], info["kind"]
+    if kind in ("train", "prefill"):
+        batch = {}
+        if cfg.frontend == "audio":
+            batch["frames"] = SDS((b, s, cfg.d_model), COMPUTE_DTYPE)
+        elif cfg.frontend == "vision":
+            st = s - cfg.n_patches
+            batch["tokens"] = SDS((b, st), jnp.int32)
+            batch["patch_embeds"] = SDS((b, cfg.n_patches, cfg.d_model),
+                                        COMPUTE_DTYPE)
+        else:
+            batch["tokens"] = SDS((b, s), jnp.int32)
+        if kind == "train":
+            lab_s = s - cfg.n_patches if cfg.frontend == "vision" else s
+            batch["labels"] = SDS((b, lab_s), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": SDS((b, 1), jnp.int32),
+            "pos": SDS((), jnp.int32)}
+
+
+def abstract_state(cfg: ArchConfig, shape_name: str,
+                   opt_cfg: OptConfig | None = None):
+    """(params, opt_state/cache) as ShapeDtypeStructs for this cell."""
+    params = tfm.abstract_params(cfg)
+    kind = SHAPES[shape_name]["kind"]
+    if kind == "train":
+        opt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+        return params, opt
+    if kind == "decode":
+        info = SHAPES[shape_name]
+        cache = tfm.abstract_cache(cfg, info["global_batch"], info["seq_len"])
+        return params, cache
+    return params, None
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig | None = None,
+                    flash_impl=None):
+    opt_cfg = opt_cfg or OptConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(tfm.loss_fn)(params, batch, cfg,
+                                                      flash_impl)
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, flash_impl=None):
+    def prefill_step(params, batch):
+        return tfm.prefill_step(params, batch, cfg, flash_impl)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mla_absorbed: bool = True):
+    def serve_step(params, cache, batch):
+        logits, new_cache = tfm.decode_step(params, cache, batch["tokens"],
+                                            batch["pos"], cfg,
+                                            mla_absorbed=mla_absorbed)
+        return logits, new_cache
+    return serve_step

@@ -1,0 +1,54 @@
+"""Training launcher:  PYTHONPATH=src python -m repro.launch.train \
+    --arch tinyllama-1.1b --steps 50 --reduced --mesh none
+
+On real hardware the same entry point runs under the production mesh
+(--mesh single|multi uses jax.make_mesh over the actual device set; this
+container exposes 1 CPU device, so --mesh none or a host-device override is
+used for local runs)."""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi", "host8"])
+    ap.add_argument("--ckpt-dir", default="ckpts")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true", default=True)
+    args = ap.parse_args()
+
+    if args.mesh == "host8":  # 8 fake host devices for local mesh testing
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count=8")
+
+    from repro.configs import get_config
+    from repro.launch import mesh as mesh_lib
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = None
+    if args.mesh in ("single", "multi"):
+        mesh = mesh_lib.make_production_mesh(multi_pod=(args.mesh == "multi"))
+    elif args.mesh == "host8":
+        mesh = mesh_lib.make_mesh((2, 4), ("data", "model"))
+
+    tcfg = TrainerConfig(steps=args.steps, global_batch=args.global_batch,
+                         seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
+    _, _, metrics = trainer.run(resume=args.resume)
+    print(f"[train] finished {len(metrics)} steps; "
+          f"final loss {metrics[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Plaintext JAX NN substrate: layers, attention (GQA/MLA), MoE, SSM,
+transformer assembly — the scale plane the CBNN secure plane rides on."""

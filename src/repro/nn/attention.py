@@ -1,0 +1,224 @@
+"""Attention variants: GQA (llama-family), MLA (deepseek v2/v3), encoder MHA.
+
+Prefill uses full causal attention (optionally the Pallas flash kernel);
+decode consumes/updates a KV cache with one new token per step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, apply_rope, dense, dense_init
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, d: int, n_heads: int, n_kv: int, head_dim: int):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, n_heads * head_dim),
+        "wk": dense_init(ks[1], d, n_kv * head_dim),
+        "wv": dense_init(ks[2], d, n_kv * head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _sdpa(q, k, v, causal: bool, q_pos=None, kv_len=None,
+          sliding_window: int = 0):
+    """q: (B,Sq,H,hd), k/v: (B,Skv,Hkv,hd). GQA by head-group repeat."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    # (B, Hkv, group, Sq, hd) x (B, Hkv, Skv, hd)
+    qg = qf.reshape(b, sq, hkv, group, hd).transpose(0, 2, 3, 1, 4)
+    kg = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kg)
+    skv = k.shape[1]
+    kv_idx = jnp.arange(skv)
+    if causal:
+        q_idx = (jnp.arange(sq) if q_pos is None else q_pos)
+        mask = kv_idx[None, :] <= q_idx[:, None]
+        if sliding_window:
+            mask &= kv_idx[None, :] > (q_idx[:, None] - sliding_window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len is not None:  # decode: mask out unwritten cache slots
+        valid = kv_idx[None, :] < kv_len
+        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    vg = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, vg)
+    vd = v.shape[-1]  # may differ from q/k head dim (MLA: q/k carry rope dims)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h * vd).astype(COMPUTE_DTYPE)
+
+
+def gqa_prefill(p, x, cfg, positions=None, causal=True, flash_impl=None):
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(dense(p, x, "wq"), cfg.n_heads, hd)
+    k = _split_heads(dense(p, x, "wk"), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p, x, "wv"), cfg.n_kv_heads, hd)
+    pos = jnp.arange(s) if positions is None else positions
+    if cfg.rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    if flash_impl is not None and causal:
+        attn = flash_impl(q, k, v)
+    else:
+        attn = _sdpa(q, k, v, causal=causal,
+                     sliding_window=cfg.sliding_window)
+    return dense(p, attn, "wo"), (k, v)
+
+
+def gqa_decode(p, x, cache, pos, cfg):
+    """x: (B,1,d); cache: dict(k,v: (B,Smax,Hkv,hd)); pos: scalar index."""
+    hd = cfg.head_dim
+    q = _split_heads(dense(p, x, "wq"), cfg.n_heads, hd)
+    k = _split_heads(dense(p, x, "wk"), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p, x, "wv"), cfg.n_kv_heads, hd)
+    posv = jnp.full((1,), pos)
+    if cfg.rope:
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, pos, 0, 0))
+    out = _sdpa(q, ck, cv, causal=False, kv_len=pos + 1,
+                sliding_window=cfg.sliding_window)
+    return dense(p, out, "wo"), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek v2/v3): low-rank compressed KV cache
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg):
+    d, r = cfg.d_model, cfg.kv_lora_rank
+    h, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    ks = jax.random.split(key, 7)
+    p = {
+        "w_dkv": dense_init(ks[0], d, r),          # compress: d -> r
+        "w_uk": dense_init(ks[1], r, h * hd),      # expand K (nope part)
+        "w_uv": dense_init(ks[2], r, h * hd),      # expand V
+        "w_kr": dense_init(ks[3], d, rd),          # shared rope key
+        "wo": dense_init(ks[4], h * hd, d),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], d, cfg.q_lora_rank)
+        p["w_uq"] = dense_init(ks[6], cfg.q_lora_rank, h * (hd + rd))
+    else:
+        p["wq"] = dense_init(ks[5], d, h * (hd + rd))
+    return p
+
+
+def _mla_q(p, x, cfg):
+    h, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        q = dense({"w": p["w_uq"]}, dense({"w": p["w_dq"]}, x, "w"), "w")
+    else:
+        q = dense(p, x, "wq")
+    q = q.reshape(x.shape[:-1] + (h, hd + rd))
+    return q[..., :hd], q[..., hd:]
+
+
+def mla_prefill(p, x, cfg, positions=None):
+    b, s, d = x.shape
+    h, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    pos = jnp.arange(s) if positions is None else positions
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    c_kv = dense(p, x, "w_dkv")                       # (B,S,r) — the cache
+    k_rope = apply_rope(dense(p, x, "w_kr")[..., None, :], pos,
+                        cfg.rope_theta)               # (B,S,1,rd) shared head
+    k_nope = dense(p, c_kv, "w_uk").reshape(b, s, h, hd)
+    v = dense(p, c_kv, "w_uv").reshape(b, s, h, hd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rd))],
+                        axis=-1)
+    attn = _sdpa(q, k, v, causal=True)
+    return dense(p, attn, "wo"), (c_kv, k_rope[..., 0, :])
+
+
+def mla_decode(p, x, cache, pos, cfg):
+    """cache: {c_kv: (B,Smax,r), k_rope: (B,Smax,rd)}.
+
+    Naive (un-absorbed) decode: expand the compressed cache to per-head K/V.
+    The absorbed variant (fold w_uk into q, score in latent space) is the
+    §Perf optimization — see transformer.py::mla_decode_absorbed.
+    """
+    b = x.shape[0]
+    h, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    posv = jnp.full((1,), pos)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+    c_new = dense(p, x, "w_dkv")
+    kr_new = apply_rope(dense(p, x, "w_kr")[..., None, :], posv,
+                        cfg.rope_theta)[..., 0, :]
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"],
+                                        c_new.astype(cache["c_kv"].dtype),
+                                        (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                          kr_new.astype(cache["k_rope"].dtype),
+                                          (0, pos, 0))
+    s = c_kv.shape[1]
+    k_nope = dense(p, c_kv, "w_uk").reshape(b, s, h, hd)
+    v = dense(p, c_kv, "w_uv").reshape(b, s, h, hd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rd))],
+        axis=-1)
+    out = _sdpa(q, k, v, causal=False, kv_len=pos + 1)
+    return dense(p, out, "wo"), {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode_absorbed(p, x, cache, pos, cfg):
+    """Absorbed MLA decode (beyond-paper perf path, deepseek-v2 paper §2.1):
+
+    scores = (q_nope @ w_uk^T) · c_kv^T  — the per-token cache is never
+    expanded to h heads; attention runs in the r-dim latent space.
+    FLOPs/token: O(S·h·(hd·r)/S ... ) — see EXPERIMENTS.md §Perf for the
+    roofline delta vs the naive path.
+    """
+    b = x.shape[0]
+    h, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    posv = jnp.full((1,), pos)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+    c_new = dense(p, x, "w_dkv")
+    kr_new = apply_rope(dense(p, x, "w_kr")[..., None, :], posv,
+                        cfg.rope_theta)[..., 0, :]
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"],
+                                        c_new.astype(cache["c_kv"].dtype),
+                                        (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                          kr_new.astype(cache["k_rope"].dtype),
+                                          (0, pos, 0))
+    s = c_kv.shape[1]
+    w_uk = p["w_uk"].reshape(r, h, hd).astype(COMPUTE_DTYPE)
+    # absorb: q_lat (B,1,h,r) = q_nope · w_uk^T
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32)))
+    scores = scores / math.sqrt(hd + rd)
+    valid = jnp.arange(s)[None, None, None, :] < (pos + 1)
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w, c_kv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, h, hd).astype(jnp.float32)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+    out = out.reshape(b, 1, h * hd).astype(COMPUTE_DTYPE)
+    return dense(p, out, "wo"), {"c_kv": c_kv, "k_rope": k_rope}

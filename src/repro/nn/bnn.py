@@ -1,0 +1,230 @@
+"""Binarized neural networks (paper §3.1): customized binarization,
+MPC-friendly (separable) convolutions, and the MnistNet/CifarNet families.
+
+Paper's customization recipe:
+  * activations binarized with Sign (straight-through estimator in training);
+    ReLU kept where accuracy needs it,
+  * weights stay full precision (32-bit fixed point at inference),
+  * convs optionally replaced by depthwise+pointwise separable convs
+    ("MPC-friendly convolutions", Fig. 3) to cut parameters/compute,
+  * trained with knowledge distillation from a full-precision teacher.
+
+Networks are sequential layer-spec lists so the secure executor
+(core/secure_model.py) can walk the same spec and pick protocols per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class L:
+    kind: str           # conv | sepconv | fc | bn | act | maxpool | flatten
+    out: int = 0        # output channels / units
+    k: int = 3          # kernel
+    stride: int = 1
+    pad: int = 0
+    act: str = "sign"   # for kind == "act": sign | relu
+
+
+def _act(spec: str):
+    return [L("bn"), L("act", act=spec)]
+
+
+# Paper Table 4 architectures (layer counts match; hidden sizes follow the
+# XONN / SecureBiNN lineage these nets descend from).
+MNIST_NETS = {
+    # 3 FC
+    "MnistNet1": [L("flatten"), L("fc", 128), *_act("sign"),
+                  L("fc", 128), *_act("sign"), L("fc", 10)],
+    # 1 CONV, 2 FC
+    "MnistNet2": [L("conv", 16, k=5, stride=2, pad=2), *_act("sign"),
+                  L("flatten"), L("fc", 100), *_act("sign"), L("fc", 10)],
+    # 2 CONV, 2 MP, 2 FC
+    "MnistNet3": [L("conv", 16, k=5, pad=2), *_act("sign"), L("maxpool"),
+                  L("conv", 16, k=5, pad=2), *_act("sign"), L("maxpool"),
+                  L("flatten"), L("fc", 100), *_act("sign"), L("fc", 10)],
+    # teacher: same shape, wider, ReLU, full precision
+    "MnistNet4": [L("conv", 32, k=5, pad=2), *_act("relu"), L("maxpool"),
+                  L("conv", 64, k=5, pad=2), *_act("relu"), L("maxpool"),
+                  L("flatten"), L("fc", 512), *_act("relu"), L("fc", 10)],
+}
+
+
+def _vgg_block(ch, n, sep=False):
+    kind = "sepconv" if sep else "conv"
+    out = []
+    for _ in range(n):
+        out += [L(kind, ch, k=3, pad=1), *_act("sign")]
+    return out + [L("maxpool")]
+
+
+CIFAR_NETS = {
+    # CifarNet1: binary MiniONN variant — 7 CONV, 2 MP, 1 FC
+    "CifarNet1": [L("conv", 64, k=3, pad=1), *_act("sign"),
+                  L("conv", 64, k=3, pad=1), *_act("sign"), L("maxpool"),
+                  L("conv", 64, k=3, pad=1), *_act("sign"),
+                  L("conv", 64, k=3, pad=1), *_act("sign"), L("maxpool"),
+                  L("conv", 64, k=3, pad=1), *_act("sign"),
+                  L("conv", 64, k=1), *_act("sign"),
+                  L("conv", 16, k=1), *_act("sign"),
+                  L("flatten"), L("fc", 10)],
+    # CifarNet2: binarized Fitnet with MPC-friendly (separable) convolutions
+    "CifarNet2": [*_vgg_block(16, 3, sep=True), *_vgg_block(32, 3, sep=True),
+                  *_vgg_block(48, 3, sep=True), L("flatten"), L("fc", 10)],
+    "CifarNet3": [*_vgg_block(32, 3, sep=True), *_vgg_block(48, 3, sep=True),
+                  *_vgg_block(64, 3, sep=True), L("flatten"), L("fc", 10)],
+    "CifarNet4": [*_vgg_block(32, 4, sep=True), *_vgg_block(48, 4, sep=True),
+                  *_vgg_block(64, 3, sep=True), L("flatten"), L("fc", 10)],
+    "CifarNet5": [*_vgg_block(32, 6, sep=True), *_vgg_block(64, 6, sep=True),
+                  *_vgg_block(96, 5, sep=True), L("flatten"), L("fc", 10)],
+    # CifarNet6: binarized VGG16
+    "CifarNet6": [*_vgg_block(64, 2), *_vgg_block(128, 2),
+                  *_vgg_block(256, 3), *_vgg_block(512, 3),
+                  *_vgg_block(512, 3),
+                  L("flatten"), L("fc", 512), *_act("sign"),
+                  L("fc", 512), *_act("sign"), L("fc", 10)],
+    # "typical BNN" baseline for Table 2: CifarNet2 with standard convs
+    "CifarNet2-typical": [*_vgg_block(16, 3), *_vgg_block(32, 3),
+                          *_vgg_block(48, 3), L("flatten"), L("fc", 10)],
+    # teacher: full-precision VGG16-style, ReLU
+    "CifarNet7": [*[l if l.kind != "act" else L("act", act="relu")
+                    for l in _vgg_block(64, 2) + _vgg_block(128, 2)
+                    + _vgg_block(256, 3) + _vgg_block(512, 3)],
+                  L("flatten"), L("fc", 512), L("bn"), L("act", act="relu"),
+                  L("fc", 10)],
+}
+
+ALL_NETS = {**MNIST_NETS, **CIFAR_NETS}
+
+INPUT_SHAPES = {**{k: (28, 28, 1) for k in MNIST_NETS},
+                **{k: (32, 32, 3) for k in CIFAR_NETS}}
+
+
+# ---------------------------------------------------------------------------
+# Binarization (training-time, STE)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def sign_ste(x):
+    return jnp.where(x >= 0, 1.0, -1.0)
+
+
+def _sign_fwd(x):
+    return sign_ste(x), x
+
+
+def _sign_bwd(res, g):
+    x = res
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)  # clipped STE
+
+
+sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Init / forward
+# ---------------------------------------------------------------------------
+
+def init_bnn(key, net: str, in_shape=None) -> Params:
+    spec = ALL_NETS[net]
+    h, w, c = in_shape or INPUT_SHAPES[net]
+    params: Params = {}
+    for i, l in enumerate(spec):
+        key, k1, k2 = jax.random.split(key, 3)
+        if l.kind == "conv":
+            params[f"l{i}_w"] = jax.random.normal(
+                k1, (l.k, l.k, c, l.out)) * math.sqrt(2.0 / (l.k * l.k * c))
+            params[f"l{i}_b"] = jnp.zeros((l.out,))
+            h, w, c = (h + 2 * l.pad - l.k) // l.stride + 1, \
+                      (w + 2 * l.pad - l.k) // l.stride + 1, l.out
+        elif l.kind == "sepconv":
+            # grouped-conv HWIO layout: (k, k, in/groups=1, out=c)
+            params[f"l{i}_dw"] = jax.random.normal(
+                k1, (l.k, l.k, 1, c)) * math.sqrt(2.0 / (l.k * l.k))
+            params[f"l{i}_pw"] = jax.random.normal(
+                k2, (1, 1, c, l.out)) * math.sqrt(2.0 / c)
+            params[f"l{i}_b"] = jnp.zeros((l.out,))
+            h, w, c = (h + 2 * l.pad - l.k) // l.stride + 1, \
+                      (w + 2 * l.pad - l.k) // l.stride + 1, l.out
+        elif l.kind == "fc":
+            params[f"l{i}_w"] = jax.random.normal(
+                k1, (c, l.out)) * math.sqrt(2.0 / c)
+            params[f"l{i}_b"] = jnp.zeros((l.out,))
+            c = l.out
+        elif l.kind == "bn":
+            params[f"l{i}_g"] = jnp.ones((c,))
+            params[f"l{i}_beta"] = jnp.zeros((c,))
+            params[f"l{i}_mu"] = jnp.zeros((c,))   # running stats
+            params[f"l{i}_var"] = jnp.ones((c,))
+        elif l.kind == "maxpool":
+            h, w = h // 2, w // 2
+        elif l.kind == "flatten":
+            c = h * w * c
+            h = w = 1
+    return params
+
+
+def _conv(x, w, stride, pad):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def bnn_forward(params: Params, x, net: str, train: bool = False,
+                binarize: bool = True):
+    """x: (B,H,W,C) float. Returns (logits, new_running_stats)."""
+    spec = ALL_NETS[net]
+    stats = {}
+    for i, l in enumerate(spec):
+        if l.kind == "conv":
+            x = _conv(x, params[f"l{i}_w"], l.stride, l.pad) + params[f"l{i}_b"]
+        elif l.kind == "sepconv":
+            cin = x.shape[-1]
+            x = jax.lax.conv_general_dilated(
+                x, params[f"l{i}_dw"], (l.stride, l.stride),
+                [(l.pad, l.pad), (l.pad, l.pad)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=cin)
+            x = _conv(x, params[f"l{i}_pw"], 1, 0) + params[f"l{i}_b"]
+        elif l.kind == "fc":
+            x = x @ params[f"l{i}_w"] + params[f"l{i}_b"]
+        elif l.kind == "bn":
+            if train:
+                axes = tuple(range(x.ndim - 1))
+                mu = x.mean(axes)
+                var = x.var(axes)
+                stats[f"l{i}_mu"] = mu
+                stats[f"l{i}_var"] = var
+            else:
+                mu, var = params[f"l{i}_mu"], params[f"l{i}_var"]
+            x = (x - mu) * jax.lax.rsqrt(var + 1e-5) * params[f"l{i}_g"] \
+                + params[f"l{i}_beta"]
+        elif l.kind == "act":
+            if l.act == "sign" and binarize:
+                x = sign_ste(x)
+            elif l.act == "sign":
+                x = jnp.tanh(x)  # un-binarized ablation
+            else:
+                x = jax.nn.relu(x)
+        elif l.kind == "maxpool":
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        elif l.kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+    return x, stats
+
+
+def param_count(params: Params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

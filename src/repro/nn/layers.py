@@ -1,0 +1,104 @@
+"""Basic layers and initializers (pure-functional, pytree params)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+# Compute dtype policy: bf16 matmuls, fp32 accumulation / norms / softmax.
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=PARAM_DTYPE):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.uniform(key, (d_in, d_out), dtype, -1.0, 1.0) * scale)
+
+
+def dense(params, x, name: str):
+    w = params[name].astype(COMPUTE_DTYPE)
+    return x.astype(COMPUTE_DTYPE) @ w
+
+
+def embedding_init(key, vocab: int, d: int, dtype=PARAM_DTYPE):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def embed(table, tokens):
+    return jnp.take(table, tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def rmsnorm_init(d: int, dtype=PARAM_DTYPE):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(g, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=PARAM_DTYPE):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(kind: str, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def norm_init(kind: str, d: int):
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+# -- activations -------------------------------------------------------------
+
+def act_fn(kind: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "sq_relu": lambda x: jnp.square(jax.nn.relu(x))}[kind]
+
+
+def mlp_init(key, d: int, d_ff: int, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, d_ff), "w_down": dense_init(ks[1], d_ff, d)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d, d_ff)
+    return p
+
+
+def mlp(p, x, act: str, gated: bool):
+    up = dense(p, x, "w_up")
+    if gated:
+        h = act_fn(act)(dense(p, x, "w_gate")) * up
+    else:
+        h = act_fn(act)(up)
+    return dense(p, h, "w_down")
+
+
+# -- RoPE --------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,164 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) blocks.
+
+Chunked linear-time prefill (matrix-form intra-chunk + recurrent inter-chunk
+state passing) and O(1)-state decode — this is what makes the `long_500k`
+shape tractable for mamba2/jamba while full-attention archs must skip it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.context import shard_hint
+from .layers import COMPUTE_DTYPE, dense, dense_init
+
+# default intra-chunk length; ArchConfig.ssd_chunk overrides (the (B,Q,Q,H)
+# intra-chunk tensors scale quadratically in Q — §Perf jamba iteration 2)
+CHUNK = 256
+
+
+def mamba2_init(key, d_model: int, expand: int, head_dim: int, n_state: int,
+                d_conv: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], d_model,
+                           2 * d_inner + 2 * n_state + n_heads),
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_inner + 2 * n_state),
+                                    jnp.float32) * 0.1,
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_g": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[2], d_inner, d_model),
+    }
+
+
+def _split_proj(proj, d_inner, n_state, n_heads):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * n_state]
+    dt = proj[..., 2 * d_inner + 2 * n_state:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w):
+    """Depthwise causal conv over seq: xbc (B,S,C), conv_w (K,C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_prefill(p, u, cfg):
+    """u: (B, S, d_model) -> (B, S, d_model), returns final ssm state.
+
+    SSD chunked scan: within chunks the SSM is computed in matrix form
+    (MXU-friendly); across chunks a small (H, hd, N) state is carried.
+    """
+    b, s, _ = u.shape
+    d_inner = cfg.mamba_expand * cfg.d_model
+    n_state = cfg.ssm_state
+    hd = cfg.mamba_head_dim
+    h = d_inner // hd
+
+    proj = dense(p, u, "w_in")
+    z, xbc, dt = _split_proj(proj, d_inner, n_state, h)
+    xbc = _causal_conv(xbc, p["conv_w"])
+    x = xbc[..., :d_inner].reshape(b, s, h, hd)
+    bmat = xbc[..., d_inner:d_inner + n_state]
+    cmat = xbc[..., d_inner + n_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                         # (H,)
+    da = dt * a                                                      # (B,S,H)
+
+    chunk = getattr(cfg, "ssd_chunk", 0) or CHUNK
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+
+    def chunk_fn(state, inp):
+        xc, bc, cc, dac, dtc = inp           # (B,Q,H,hd) (B,Q,N) (B,Q,N) (B,Q,H)
+        q = xc.shape[1]
+        cum = jnp.cumsum(dac, axis=1)                                # (B,Q,H)
+        # intra-chunk (matrix form): L[i,j] = exp(cum_i - cum_j) for i>=j
+        li = cum[:, :, None, :] - cum[:, None, :, :]                 # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        # the quadratic intra-chunk tensors shard H over "model"
+        decay = shard_hint(decay, "batch", None, None, "model")
+        scores = jnp.einsum("bqn,bkn->bqk", cc.astype(jnp.float32),
+                            bc.astype(jnp.float32))
+        m = scores[:, :, :, None] * decay                            # (B,Q,Q,H)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]                # (B,Q,H,hd)
+        y_intra = jnp.einsum("bqkh,bkhd->bqhd", m, xdt)
+        # contribution of carried state
+        y_state = jnp.einsum("bqn,bhdn->bqhd", cc.astype(jnp.float32), state) \
+            * jnp.exp(cum)[..., None]
+        # new state
+        tail = jnp.exp(cum[:, -1:, :] - cum)                         # (B,Q,H)
+        state_new = state * jnp.exp(cum[:, -1])[:, :, None, None] \
+            + jnp.einsum("bqhd,bqn,bqh->bhdn", xdt, bc.astype(jnp.float32),
+                         tail)
+        return state_new, y_intra + y_state
+
+    def to_chunks(t):
+        return t.reshape((b, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    state0 = jnp.zeros((b, h, hd, n_state), jnp.float32)
+    final_state, ys = jax.lax.scan(
+        chunk_fn, state0,
+        (to_chunks(x), to_chunks(bmat), to_chunks(cmat), to_chunks(da),
+         to_chunks(dt)))
+    y = ys.swapaxes(0, 1).reshape(b, s + pad, h, hd)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    # gated RMSNorm then output proj
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-6) * p["norm_g"]
+    out = dense(p, y.astype(COMPUTE_DTYPE), "w_out")
+    return out, final_state
+
+
+def ssd_decode(p, u, cache, cfg):
+    """One-token step. cache: {state: (B,H,hd,N), conv: (B,K-1,C)}."""
+    b = u.shape[0]
+    d_inner = cfg.mamba_expand * cfg.d_model
+    n_state = cfg.ssm_state
+    hd = cfg.mamba_head_dim
+    h = d_inner // hd
+    k = p["conv_w"].shape[0]
+
+    proj = dense(p, u, "w_in")                                   # (B,1,·)
+    z, xbc, dt = _split_proj(proj, d_inner, n_state, h)
+    conv_in = jnp.concatenate([cache["conv"],
+                               xbc.astype(cache["conv"].dtype)], axis=1)
+    conv_out = (conv_in * p["conv_w"][None]).sum(axis=1, keepdims=True)
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    new_conv = conv_in[:, 1:]
+
+    x = xbc[..., :d_inner].reshape(b, h, hd)
+    bv = xbc[:, 0, d_inner:d_inner + n_state]                    # (B,N)
+    cv = xbc[:, 0, d_inner + n_state:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * a)                                     # (B,H)
+    xdt = x.astype(jnp.float32) * dtv[..., None]                 # (B,H,hd)
+    state = cache["state"] * decay[:, :, None, None] \
+        + jnp.einsum("bhd,bn->bhdn", xdt, bv.astype(jnp.float32))
+    y = jnp.einsum("bhdn,bn->bhd", state, cv.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-6) * p["norm_g"]
+    out = dense(p, y.astype(COMPUTE_DTYPE), "w_out")
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,370 @@
+"""Model assembly: layer groups, scan-over-layers with remat, train/prefill/
+decode steps for every assigned architecture family.
+
+Heterogeneous stacks (deepseek dense→MoE prefix, jamba mamba/attention
+interleave) are expressed as a list of *groups*; each group's layers are
+stacked on a leading axis and executed with jax.lax.scan (single-layer trace
+⇒ fast 512-device compiles) under jax.checkpoint (save layer boundaries
+only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ArchConfig
+from ..launch.context import shard_hint
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (COMPUTE_DTYPE, apply_norm, dense, dense_init, embed,
+                     embedding_init, mlp, mlp_init, norm_init)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer-group plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    kind: str   # block | mla_dense | mla_moe | mamba | jamba_period
+    count: int  # number of stacked layers (scan length)
+
+
+def layer_groups(cfg: ArchConfig) -> list[Group]:
+    if cfg.family == "ssm":
+        return [Group("mamba", cfg.n_layers)]
+    if cfg.attn_period:  # jamba: scan over periods of (period-1) mamba + attn
+        assert cfg.n_layers % cfg.attn_period == 0
+        return [Group("jamba_period", cfg.n_layers // cfg.attn_period)]
+    if cfg.mla:
+        gs = []
+        if cfg.dense_layers:
+            gs.append(Group("mla_dense", min(cfg.dense_layers, cfg.n_layers)))
+        if cfg.n_layers - cfg.dense_layers > 0:
+            gs.append(Group("mla_moe", cfg.n_layers - cfg.dense_layers))
+        return gs
+    return [Group("block", cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _ffn_init(key, cfg: ArchConfig, use_moe: bool):
+    if use_moe:
+        return moe_mod.moe_init(key, cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                                cfg.n_experts, cfg.gated_mlp,
+                                cfg.n_shared_experts,
+                                (cfg.moe_d_ff or cfg.d_ff) * max(1, cfg.n_shared_experts))
+    return mlp_init(key, cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+
+
+def _layer_init(key, cfg: ArchConfig, kind: str):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {"norm1": norm_init(cfg.norm, d), "norm2": norm_init(cfg.norm, d)}
+    if kind == "block":
+        p["attn"] = attn.gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim)
+        p["ffn"] = _ffn_init(ks[1], cfg, False)
+    elif kind == "mla_dense":
+        p["attn"] = attn.mla_init(ks[0], cfg)
+        p["ffn"] = _ffn_init(ks[1], cfg, False)
+    elif kind == "mla_moe":
+        p["attn"] = attn.mla_init(ks[0], cfg)
+        p["ffn"] = _ffn_init(ks[1], cfg, True)
+    elif kind == "mamba":
+        p["mamba"] = ssm_mod.mamba2_init(ks[0], d, cfg.mamba_expand,
+                                         cfg.mamba_head_dim, cfg.ssm_state,
+                                         cfg.mamba_d_conv)
+        del p["norm2"]
+        p.pop("ffn", None)
+    elif kind == "jamba_period":
+        per = cfg.attn_period
+        sub = []
+        for i in range(per):
+            kk = jax.random.split(ks[2], per)[i]
+            is_attn = (i == per // 2)
+            use_moe = cfg.moe and (i % cfg.moe_every == 1)
+            lp: Params = {"norm1": norm_init(cfg.norm, d),
+                          "norm2": norm_init(cfg.norm, d)}
+            if is_attn:
+                lp["attn"] = attn.gqa_init(kk, d, cfg.n_heads, cfg.n_kv_heads,
+                                           cfg.head_dim)
+            else:
+                lp["mamba"] = ssm_mod.mamba2_init(
+                    kk, d, cfg.mamba_expand, cfg.mamba_head_dim,
+                    cfg.ssm_state, cfg.mamba_d_conv)
+            lp["ffn"] = _ffn_init(jax.random.fold_in(kk, 7), cfg, use_moe)
+            sub.append(lp)
+        p = {f"sub{i}": sp for i, sp in enumerate(sub)}
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4 + len(layer_groups(cfg)))
+    params: Params = {"embed": embedding_init(ks[0], cfg.vocab, cfg.d_model),
+                      "final_norm": norm_init(cfg.norm, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab)
+    if cfg.frontend == "audio":
+        params["front_proj"] = dense_init(ks[2], cfg.d_model, cfg.d_model)
+    if cfg.mtp:
+        params["mtp_norm"] = norm_init(cfg.norm, cfg.d_model)
+        params["mtp_proj"] = dense_init(ks[2], 2 * cfg.d_model, cfg.d_model)
+    for gi, g in enumerate(layer_groups(cfg)):
+        gkeys = jax.random.split(ks[3 + gi], g.count)
+        params[f"group{gi}"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, g.kind))(gkeys)
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    """ShapeDtypeStruct pytree — dry-run path, zero allocation."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(p, x, cfg: ArchConfig, use_moe: bool):
+    if use_moe:
+        return moe_mod.moe_ffn(p, x, top_k=cfg.experts_per_tok, act=cfg.act,
+                               gated=cfg.gated_mlp)
+    return mlp(p, x, cfg.act, cfg.gated_mlp)
+
+
+def _block_fwd(p, h, cfg: ArchConfig, kind: str, flash_impl=None):
+    """One layer, prefill/training mode. h: (B,S,d)."""
+    if kind == "mamba":
+        y, _ = ssm_mod.ssd_prefill(p["mamba"], apply_norm(cfg.norm, p["norm1"], h), cfg)
+        return h + y
+    if kind == "jamba_period":
+        per = cfg.attn_period
+
+        def sub_layer(lp, hh):
+            hin = apply_norm(cfg.norm, lp["norm1"], hh)
+            if "attn" in lp:
+                y, _ = attn.gqa_prefill(lp["attn"], hin, cfg,
+                                        flash_impl=flash_impl)
+            else:
+                y, _ = ssm_mod.ssd_prefill(lp["mamba"], hin, cfg)
+            hh = hh + y
+            use_moe = "router" in lp["ffn"]
+            return hh + _ffn_apply(lp["ffn"],
+                                   apply_norm(cfg.norm, lp["norm2"], hh),
+                                   cfg, use_moe)
+
+        # nested remat: the scan-level checkpoint treats the whole 8-layer
+        # period as one unit; re-checkpointing each sub-layer keeps only
+        # sub-layer boundaries live during the period's backward pass
+        # (§Perf jamba iteration 3).
+        sub_layer = jax.checkpoint(sub_layer, prevent_cse=False)
+        for i in range(per):
+            h = sub_layer(p[f"sub{i}"], h)
+        return h
+    # attention families
+    hin = apply_norm(cfg.norm, p["norm1"], h)
+    if kind in ("mla_dense", "mla_moe"):
+        y, _ = attn.mla_prefill(p["attn"], hin, cfg)
+    else:
+        y, _ = attn.gqa_prefill(p["attn"], hin, cfg,
+                                causal=not cfg.encoder_only,
+                                flash_impl=flash_impl)
+    h = h + y
+    h = h + _ffn_apply(p["ffn"], apply_norm(cfg.norm, p["norm2"], h), cfg,
+                       use_moe=(kind == "mla_moe"))
+    return h
+
+
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    if cfg.frontend == "audio":
+        h = dense(params, batch["frames"].astype(COMPUTE_DTYPE), "front_proj")
+    elif cfg.frontend == "vision":
+        text = embed(params["embed"], batch["tokens"])
+        h = jnp.concatenate([batch["patch_embeds"].astype(COMPUTE_DTYPE),
+                             text], axis=1)
+    else:
+        h = embed(params["embed"], batch["tokens"])
+    return h
+
+
+def forward(params, batch, cfg: ArchConfig, flash_impl=None,
+            return_hidden: bool = False):
+    """Full-sequence forward -> logits (B,S,V)."""
+    h = _embed_inputs(params, batch, cfg)
+    h = shard_hint(h, "batch", "seq", None)
+
+    for gi, g in enumerate(layer_groups(cfg)):
+        gp = params[f"group{gi}"]
+
+        def body(carry, lp, kind=g.kind):
+            out = _block_fwd(lp, carry, cfg, kind, flash_impl)
+            # sequence-sharded residual stream at layer boundaries keeps the
+            # remat-saved activations at 1/model_size per chip
+            return shard_hint(out, "batch", "seq", None), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, gp)
+
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (h.astype(COMPUTE_DTYPE) @ head.astype(COMPUTE_DTYPE))
+    logits = shard_hint(logits, "batch", None, "model")
+    if return_hidden:
+        return logits, h
+    return logits
+
+
+def _ce(logits, labels):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0)
+    nll = jnp.where(mask, lse - gold, 0.0)
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+MTP_WEIGHT = 0.3
+
+
+def loss_fn(params, batch, cfg: ArchConfig, flash_impl=None):
+    labels = batch["labels"]
+    if cfg.mtp:
+        # depth-1 multi-token prediction (deepseek-v3 §2.2): an extra
+        # projection of [h_t ; emb(label_t)] predicts token t+2 through the
+        # shared head; the aux CE is weighted into the main loss.
+        logits, h = forward(params, batch, cfg, flash_impl,
+                            return_hidden=True)
+        loss = _ce(logits, labels)
+        lab_emb = embed(params["embed"], jnp.maximum(labels, 0))
+        h2 = jnp.concatenate(
+            [apply_norm(cfg.norm, params["mtp_norm"], h).astype(COMPUTE_DTYPE),
+             lab_emb], axis=-1)
+        h2 = (h2 @ params["mtp_proj"].astype(COMPUTE_DTYPE))
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits2 = shard_hint(h2 @ head.astype(COMPUTE_DTYPE),
+                             "batch", None, "model")
+        labels2 = jnp.concatenate(
+            [labels[:, 1:], jnp.full_like(labels[:, :1], -1)], axis=-1)
+        return loss + MTP_WEIGHT * _ce(logits2, labels2)
+    logits = forward(params, batch, cfg, flash_impl)
+    if cfg.frontend == "vision":  # loss only over the text positions
+        logits = logits[:, cfg.n_patches:]
+    return _ce(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV / state caches)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int):
+    kv_dt = COMPUTE_DTYPE
+    if kind == "block":
+        return {"k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), kv_dt),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), kv_dt)}
+    if kind in ("mla_dense", "mla_moe"):
+        return {"c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), kv_dt),
+                "k_rope": jnp.zeros((batch, max_seq, cfg.rope_head_dim), kv_dt)}
+    if kind == "mamba":
+        di = cfg.mamba_expand * cfg.d_model
+        h = di // cfg.mamba_head_dim
+        return {"state": jnp.zeros((batch, h, cfg.mamba_head_dim,
+                                    cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1,
+                                   di + 2 * cfg.ssm_state), kv_dt)}
+    if kind == "jamba_period":
+        per = cfg.attn_period
+        return {f"sub{i}": _layer_cache(
+                    cfg, "block" if i == per // 2 else "mamba", batch, max_seq)
+                for i in range(per)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    cache = {}
+    for gi, g in enumerate(layer_groups(cfg)):
+        cache[f"group{gi}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (g.count,) + x.shape).copy(),
+            _layer_cache(cfg, g.kind, batch, max_seq))
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def _block_decode(p, c, h, pos, cfg: ArchConfig, kind: str, mla_absorbed=True):
+    if kind == "mamba":
+        y, c2 = ssm_mod.ssd_decode(p["mamba"],
+                                   apply_norm(cfg.norm, p["norm1"], h), c, cfg)
+        return h + y, c2
+    if kind == "jamba_period":
+        per = cfg.attn_period
+        c2 = {}
+        for i in range(per):
+            lp, lc = p[f"sub{i}"], c[f"sub{i}"]
+            hin = apply_norm(cfg.norm, lp["norm1"], h)
+            if "attn" in lp:
+                y, nc = attn.gqa_decode(lp["attn"], hin, lc, pos, cfg)
+            else:
+                y, nc = ssm_mod.ssd_decode(lp["mamba"], hin, lc, cfg)
+            c2[f"sub{i}"] = nc
+            h = h + y
+            use_moe = "router" in lp["ffn"]
+            h = h + _ffn_apply(lp["ffn"], apply_norm(cfg.norm, lp["norm2"], h),
+                               cfg, use_moe)
+        return h, c2
+    hin = apply_norm(cfg.norm, p["norm1"], h)
+    if kind in ("mla_dense", "mla_moe"):
+        fn = attn.mla_decode_absorbed if mla_absorbed else attn.mla_decode
+        y, c2 = fn(p["attn"], hin, c, pos, cfg)
+    else:
+        y, c2 = attn.gqa_decode(p["attn"], hin, c, pos, cfg)
+    h = h + y
+    h = h + _ffn_apply(p["ffn"], apply_norm(cfg.norm, p["norm2"], h), cfg,
+                       use_moe=(kind == "mla_moe"))
+    return h, c2
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig,
+                mla_absorbed: bool = True):
+    """One serving step: tokens (B,1) at position `pos` -> (logits, cache)."""
+    h = embed(params["embed"], tokens)
+    new_cache = {}
+    for gi, g in enumerate(layer_groups(cfg)):
+        gp, gc = params[f"group{gi}"], cache[f"group{gi}"]
+
+        def body(carry, xs, kind=g.kind):
+            lp, lc = xs
+            h2, c2 = _block_decode(lp, lc, carry, pos, cfg, kind, mla_absorbed)
+            return h2, c2
+
+        h, new_gc = jax.lax.scan(body, h, (gp, gc))
+        new_cache[f"group{gi}"] = new_gc
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill_step(params, batch, cfg: ArchConfig, flash_impl=None):
+    """Prefill: forward over the prompt, returning last-position logits.
+
+    (Cache materialization for decode handoff exists in decode tests; the
+    prefill benchmark cell measures the forward compute itself.)
+    """
+    logits = forward(params, batch, cfg, flash_impl)
+    return logits[:, -1]

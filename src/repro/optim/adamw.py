@@ -1,0 +1,120 @@
+"""AdamW / SGD implemented directly in JAX (no optax dependency).
+
+Optimizer state is a pytree mirroring params; the launcher shards it with
+ZeRO-1 specs (state sharded over the data axis on top of the param specs) —
+see launch/mesh.py::zero1_specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # "fp32" | "int8": block-quantized moments (bitsandbytes-style, per-row
+    # scales) — cuts optimizer-state HBM 4x; §Perf deepseek-v3 iteration.
+    state_dtype: str = "fp32"
+
+
+def _q8(x):
+    """Signed per-row int8 quantization: x ≈ q · s."""
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    return {"q8": jnp.round(x / s).astype(jnp.int8), "s8": s.astype(jnp.float32)}
+
+
+def _dq8(d):
+    return d["q8"].astype(jnp.float32) * d["s8"]
+
+
+def _qu8(x):
+    """Unsigned per-row uint8 quantization (second moment, x >= 0)."""
+    s = jnp.max(x, axis=-1, keepdims=True) / 255.0 + 1e-30
+    return {"qu8": jnp.round(x / s).astype(jnp.uint8),
+            "su8": s.astype(jnp.float32)}
+
+
+def _dqu8(d):
+    return d["qu8"].astype(jnp.float32) * d["su8"]
+
+
+def _is_q(x):
+    return isinstance(x, dict) and ("q8" in x or "qu8" in x)
+
+
+def adamw_init(params, cfg: OptConfig | None = None):
+    state_dtype = cfg.state_dtype if cfg is not None else "fp32"
+    if state_dtype == "int8":
+        m = jax.tree.map(lambda p: _q8(jnp.zeros(p.shape, jnp.float32)), params)
+        v = jax.tree.map(lambda p: _qu8(jnp.zeros(p.shape, jnp.float32)), params)
+        return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = _schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    bc1 = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+    quant = cfg.state_dtype == "int8"
+
+    def upd(p, g, m, v):
+        if quant:
+            m = _dq8(m)
+            v = _dqu8(v)
+        g = g.astype(jnp.float32) * scale
+        m_n = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v_n = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mh = m_n / bc1
+        vh = v_n / bc2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        p_n = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+        if quant:
+            return p_n, _q8(m_n), _qu8(v_n)
+        return p_n, m_n, v_n
+
+    p_flat, treedef = jax.tree_util.tree_flatten(params)
+    g_flat = jax.tree_util.tree_flatten(grads)[0]
+    m_flat = jax.tree_util.tree_flatten(state["m"], is_leaf=_is_q)[0]
+    v_flat = jax.tree_util.tree_flatten(state["v"], is_leaf=_is_q)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat,
+                                                 v_flat)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+def sgd_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = _schedule(cfg, step)
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_params, {**state, "step": step}, global_norm(grads)

@@ -1,0 +1,46 @@
+"""Cross-pod gradient compression (distributed-optimization building block).
+
+Inter-pod DCI links are an order of magnitude slower than intra-pod ICI, so
+the cross-pod gradient reduction is the place compression pays.  The
+primitive here implements the standard compressed all-reduce:
+
+    each pod quantizes its partial gradient to int8 with a per-row scale,
+    all-gathers the (int8, scale) pairs over the "pod" axis (1 B/elem of
+    link traffic instead of 4 B), and de-quantize-sums locally.
+
+Exposed as `int8_psum(x, axis_name)` for use inside shard_map over the
+"pod" axis (e.g. an explicit pod-DP training step); traffic reduction is
+~3.8x (int8 payload + f32 row scales).  Error is bounded by one int8 ulp
+of the per-row max (property-tested in tests/test_compress.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_rows(x):
+    xf = x.astype(jnp.float32)
+    flat = xf.reshape(-1, x.shape[-1]) if x.ndim > 1 else xf.reshape(1, -1)
+    s = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.round(flat / s).astype(jnp.int8)
+    return q, s
+
+
+def _dequant_rows(q, s, shape):
+    return (q.astype(jnp.float32) * s).reshape(shape)
+
+
+def int8_psum(x, axis_name: str):
+    """Compressed psum over `axis_name` (inside shard_map): all-gather int8
+    payloads + scales, de-quantize and sum locally.  Drop-in for
+    jax.lax.psum on gradient pytree leaves."""
+    q, s = _quant_rows(x)
+    qg = jax.lax.all_gather(q, axis_name)        # (n, rows, cols) int8
+    sg = jax.lax.all_gather(s, axis_name)        # (n, rows, 1) f32
+    total = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    return total.reshape(x.shape).astype(x.dtype)
+
+
+def compressed_tree_psum(grads, axis_name: str):
+    return jax.tree.map(lambda g: int8_psum(g, axis_name), grads)

@@ -1,0 +1,139 @@
+"""Training loop with fault tolerance, resume, and straggler accounting.
+
+The loop is deliberately boring — crash-only software: any failure between
+two checkpoints loses at most `ckpt_every` steps; restart resumes from the
+manifest (including the data-stream cursor).  Straggler mitigation on a
+synchronous TPU mesh is restart-based: a per-step deadline (EWMA × factor)
+flags stalls, the offender is logged, and the runbook answer is
+checkpoint-restart without the sick host (elastic restore onto the smaller
+mesh is exercised in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..configs import ArchConfig
+from ..data import token_stream
+from ..launch import mesh as mesh_lib
+from ..launch import steps as steps_lib
+from ..launch.context import use_plan
+from ..nn import transformer as tfm
+from ..optim import OptConfig, adamw_init
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_every: int = 50
+    ckpt_dir: str = "ckpts"
+    log_every: int = 10
+    seed: int = 0
+    straggler_factor: float = 3.0   # deadline = factor × EWMA step time
+    keep_ckpts: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig,
+                 opt_cfg: OptConfig | None = None, mesh=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or OptConfig()
+        self.mesh = mesh
+        self.plan = mesh_lib.Plan(mesh) if mesh is not None else None
+        self.metrics: list[dict] = []
+        self._ewma = None
+
+    # -- state ----------------------------------------------------------
+    def init_state(self):
+        params = tfm.init_params(jax.random.PRNGKey(self.tcfg.seed), self.cfg)
+        opt = adamw_init(params)
+        return params, opt
+
+    def _shardings(self, params, opt):
+        if self.plan is None:
+            return None, None
+        ps = mesh_lib.param_specs(params, self.plan)
+        p_sh = mesh_lib.to_shardings(ps, self.plan)
+        o_sh = mesh_lib.to_shardings(mesh_lib.opt_specs(opt, ps), self.plan)
+        return p_sh, o_sh
+
+    # -- main loop ------------------------------------------------------
+    def run(self, resume: bool = True, fail_at_step: int | None = None):
+        """Returns (params, opt, history). `fail_at_step` injects a crash
+        (for the fault-tolerance test)."""
+        t = self.tcfg
+        params, opt = self.init_state()
+        p_sh, o_sh = self._shardings(params, opt)
+        start = 0
+        if resume and latest_step(t.ckpt_dir) is not None:
+            state, step, extra = restore_checkpoint(
+                t.ckpt_dir, jax.eval_shape(lambda: {"params": params,
+                                                    "opt": opt}),
+                shardings=({"params": p_sh, "opt": o_sh}
+                           if p_sh is not None else None))
+            params, opt = state["params"], state["opt"]
+            start = step
+        step_fn = steps_lib.make_train_step(self.cfg, self.opt_cfg)
+        if self.plan is not None:
+            b_abs = {"tokens": jax.ShapeDtypeStruct(
+                         (t.global_batch, t.seq_len), np.int32),
+                     "labels": jax.ShapeDtypeStruct(
+                         (t.global_batch, t.seq_len), np.int32)}
+            b_sh = mesh_lib.to_shardings(
+                mesh_lib.batch_specs(b_abs, self.plan), self.plan)
+            jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+        else:
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        stream = token_stream(t.global_batch, t.seq_len, self.cfg.vocab,
+                              seed=t.seed, start_step=start)
+        ctx = use_plan(self.plan) if self.plan is not None else _nullctx()
+        with ctx:
+            for batch, step in stream:
+                if step >= t.steps:
+                    break
+                t0 = time.time()
+                params, opt, m = jitted(params, opt, batch)
+                loss = float(m["loss"])
+                dt = time.time() - t0
+                self._ewma = dt if self._ewma is None \
+                    else 0.9 * self._ewma + 0.1 * dt
+                rec = {"step": step, "loss": loss, "time_s": round(dt, 4)}
+                if dt > t.straggler_factor * self._ewma and step > start + 2:
+                    rec["straggler"] = True  # deadline breach -> runbook
+                self.metrics.append(rec)
+                if step % t.log_every == 0:
+                    print(f"[train] step={step} loss={loss:.4f} dt={dt:.3f}s",
+                          flush=True)
+                next_step = step + 1
+                if next_step % t.ckpt_every == 0 or next_step == t.steps:
+                    save_checkpoint(t.ckpt_dir, next_step,
+                                    {"params": params, "opt": opt},
+                                    extra={"arch": self.cfg.name,
+                                           "data_cursor": next_step},
+                                    keep=t.keep_ckpts)
+                if fail_at_step is not None and next_step >= fail_at_step:
+                    raise RuntimeError(f"injected failure at step {next_step}")
+        Path(t.ckpt_dir).mkdir(parents=True, exist_ok=True)
+        (Path(t.ckpt_dir) / "metrics.jsonl").write_text(
+            "\n".join(json.dumps(m) for m in self.metrics))
+        return params, opt, self.metrics
+
+
+class _nullctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

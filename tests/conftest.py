@@ -1,0 +1,19 @@
+import jax
+import pytest
+
+from repro.core import RING32, Parties
+
+
+@pytest.fixture
+def ring():
+    return RING32
+
+
+@pytest.fixture
+def parties():
+    return Parties.setup(jax.random.PRNGKey(42))
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,65 @@
+"""Elastic reshape: a checkpoint written under one mesh restores onto a
+different mesh (the recover-without-the-sick-host path).  Subprocess with 8
+fake devices (main session keeps 1)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.launch import mesh as mesh_lib
+from repro.train import Trainer, TrainerConfig, restore_checkpoint
+from repro.optim import adamw_init
+from repro.nn import transformer as tfm
+
+cfg = get_config("tinyllama-1.1b").reduced()
+ck = "CKPT_DIR"
+
+# train 4 steps on a (2,4) mesh and checkpoint
+mesh_a = mesh_lib.make_mesh((2, 4), ("data", "model"))
+t = Trainer(cfg, TrainerConfig(steps=4, global_batch=4, seq_len=32,
+                               ckpt_dir=ck, ckpt_every=4, log_every=100),
+            mesh=mesh_a)
+p_a, o_a, _ = t.run(resume=False)
+
+# restore onto a transposed (4,2) mesh — different shard layout everywhere
+mesh_b = mesh_lib.make_mesh((4, 2), ("data", "model"))
+plan_b = mesh_lib.Plan(mesh_b)
+params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+opt = adamw_init(params)
+ps = mesh_lib.param_specs(params, plan_b)
+p_sh = mesh_lib.to_shardings(ps, plan_b)
+o_sh = mesh_lib.to_shardings(mesh_lib.opt_specs(opt, ps), plan_b)
+state, step, extra = restore_checkpoint(
+    ck, jax.eval_shape(lambda: {"params": params, "opt": opt}),
+    shardings={"params": p_sh, "opt": o_sh})
+assert step == 4, step
+
+# values identical to the post-training params from mesh A
+for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(state["params"])):
+    np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+# and the restored arrays actually live on mesh B's devices
+leaf = jax.tree.leaves(state["params"])[0]
+assert len(leaf.sharding.device_set) == 8
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_reshape_across_meshes(tmp_path):
+    script = tmp_path / "elastic.py"
+    script.write_text(SCRIPT.replace("CKPT_DIR",
+                                     str(tmp_path / "ck").replace("\\", "/")))
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, timeout=900, env=env, cwd=str(repo))
+    assert r.returncode == 0 and "ELASTIC_OK" in r.stdout, \
+        f"stdout:\n{r.stdout[-2000:]}\nstderr:\n{r.stderr[-3000:]}"

@@ -1,0 +1,81 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import (binary_binary_matmul_op,
+                               binary_weight_matmul_op, flash_attention_op,
+                               ring_matmul_op, rss_matmul_dot)
+from repro.kernels.ring_matmul import balanced_limbs
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (256, 128, 384), (128, 512, 128),
+    (64, 96, 32), (33, 17, 5), (1, 128, 1),
+])
+def test_ring_matmul_shapes(m, k, n):
+    key = jax.random.PRNGKey(m * 1000 + k + n)
+    a = jax.random.bits(key, (m, k), jnp.uint32)
+    b = jax.random.bits(jax.random.fold_in(key, 1), (k, n), jnp.uint32)
+    got = ring_matmul_op(a, b)
+    want = ref.ring_matmul_ref(a, b)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_balanced_limbs_reconstruct():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.bits(key, (4096,), jnp.uint32)
+    limbs = balanced_limbs(x)
+    acc = np.zeros(4096, np.uint32)
+    for p in range(4):
+        acc = acc + (np.asarray(limbs[p]).astype(np.int64)
+                     << (8 * p)).astype(np.uint32)
+    assert np.array_equal(acc, np.asarray(x))
+    assert np.asarray(limbs).min() >= -128 and np.asarray(limbs).max() <= 127
+
+
+@pytest.mark.parametrize("weights", ["pm1", "01"])
+def test_binary_weight_matmul(weights):
+    key = jax.random.PRNGKey(3)
+    a = jax.random.bits(key, (128, 256), jnp.uint32)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (256, 128), 0, 2)
+    w = (w * 2 - 1 if weights == "pm1" else w).astype(jnp.int8)
+    got = binary_weight_matmul_op(a, w)
+    want = ref.binary_weight_matmul_ref(a, w)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_binary_binary_matmul():
+    key = jax.random.PRNGKey(4)
+    a = (jax.random.randint(key, (128, 128), 0, 2) * 2 - 1).astype(jnp.int8)
+    w = (jax.random.randint(jax.random.fold_in(key, 1), (128, 128), 0, 2)
+         * 2 - 1).astype(jnp.int8)
+    got = binary_binary_matmul_op(a, w)
+    want = ref.binary_binary_matmul_ref(a, w)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("s,h,hkv,hd", [(256, 4, 4, 64), (256, 8, 2, 64),
+                                        (128, 4, 1, 32)])
+def test_flash_attention(s, h, hkv, hd):
+    key = jax.random.PRNGKey(s + h)
+    q = jax.random.normal(key, (2, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, hkv, hd))
+    got = flash_attention_op(q, k, v)
+    want = ref.flash_attention_ref(q, k, v)
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() < 2e-5
+
+
+def test_rss_matmul_dot_integration(key, ring, parties):
+    """The kernel as the RSS linear layer's dot (DESIGN.md §3)."""
+    from repro.core import matmul, reconstruct, share, truncate
+    a = jax.random.normal(key, (16, 64))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (64, 8))
+    as_ = share(a, key, ring)
+    bs_ = share(b, jax.random.fold_in(key, 2), ring)
+    got = reconstruct(truncate(
+        matmul(as_, bs_, parties, dot=rss_matmul_dot), parties))
+    assert np.abs(np.asarray(got) - np.asarray(a @ b)).max() < 2e-2

@@ -1,0 +1,175 @@
+"""Mesh/partition-spec rules + roofline analyzer unit tests (no big compiles
+here — the 512-device farm exercises those; see results/)."""
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.nn import transformer as tfm
+from repro.roofline.analyze import (collective_bytes_from_hlo,
+                                    _type_bytes, analytic_flops,
+                                    model_flops)
+
+
+class FakePlan:
+    """Plan-shaped stub for spec-rule tests (no real mesh needed)."""
+    data_size = 16
+    model_size = 16
+    has_pod = False
+    batch_axes = ("data",)
+    batch_size_div = 16
+
+    def batch_spec_axes(self, b):
+        return "data" if b % 16 == 0 else None
+
+
+def test_param_specs_2d_sharding():
+    cfg = get_config("tinyllama-1.1b")
+    params = tfm.abstract_params(cfg)
+    specs = mesh_lib.param_specs(params, FakePlan())
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    by_name = {"/".join(str(getattr(p, "key", p)) for p in path): s
+               for path, s in flat}
+    wq = [v for k, v in by_name.items() if k.endswith("attn/wq")]
+    assert wq and wq[0] == P(None, "data", "model")
+    wo = [v for k, v in by_name.items() if k.endswith("attn/wo")]
+    assert wo and wo[0] == P(None, "model", "data")
+    emb = [v for k, v in by_name.items() if k == "embed"]
+    assert emb[0] == P("model", "data")
+
+
+def test_param_specs_moe_expert_parallel():
+    cfg = get_config("deepseek-v3-671b")
+    params = tfm.abstract_params(cfg)
+    specs = mesh_lib.param_specs(params, FakePlan())
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    expert_up = [s for path, s in flat
+                 if "ffn/w_up" in "/".join(str(getattr(p, "key", p))
+                                           for p in path)
+                 and len(s) == 4]
+    assert expert_up and expert_up[0][1] == "model"  # E axis -> EP
+
+
+def test_every_cell_has_divisible_or_replicated_specs():
+    """No spec may demand a non-divisible shard (pjit would reject)."""
+    plan = FakePlan()
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        params = tfm.abstract_params(cfg)
+        specs = mesh_lib.param_specs(params, plan)
+
+        def check(path, leaf_spec, leaf):
+            for dim, ax in zip(leaf.shape, leaf_spec):
+                if ax is None:
+                    continue
+                size = {"data": 16, "model": 16}[ax]
+                assert dim % size == 0, (arch, path, leaf.shape, leaf_spec)
+
+        jax.tree_util.tree_map_with_path(
+            lambda p, s, l: check(p, s, l), specs, params,
+            is_leaf=lambda x: isinstance(x, P))
+
+
+def test_batch_spec_divisibility_rules():
+    plan = FakePlan()
+    assert plan.batch_spec_axes(256) == "data"
+    assert plan.batch_spec_axes(1) is None
+
+
+def test_type_bytes_parser():
+    assert _type_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _type_bytes("bf16[8]") == 16
+    assert _type_bytes("(f32[2,2]{1,0}, u8[4])") == 20
+    assert _type_bytes("pred[]") == 1
+
+
+def test_collective_parser_with_while_loop():
+    hlo = """
+HloModule test
+
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[64] get-tuple-element(%p), index=1
+  %ag = f32[64] all-gather(%x), dimensions={0}
+  %one = s32[] constant(1)
+  %ivn = s32[] add(%iv, %one)
+  ROOT %t = (s32[], f32[64]) tuple(%ivn, %ag)
+}
+
+%cond.1 (p2: (s32[], f32[64])) -> pred[] {
+  %p2 = (s32[], f32[64]) parameter(0)
+  %iv2 = s32[] get-tuple-element(%p2), index=0
+  %limit = s32[] constant(22)
+  ROOT %cmp = pred[] compare(%iv2, %limit), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64] parameter(0)
+  %ar = f32[64] all-reduce(%a), to_apply=%sum
+  %init = (s32[], f32[64]) tuple(%zero, %ar)
+  %w = (s32[], f32[64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[64] get-tuple-element(%w), index=1
+}
+"""
+    colls = collective_bytes_from_hlo(hlo)
+    assert colls["all-reduce"]["count"] == 1
+    assert colls["all-reduce"]["bytes"] == 64 * 4
+    # the in-loop all-gather must be scaled by the trip count (22)
+    assert colls["all-gather"]["count"] == 22
+    assert colls["all-gather"]["bytes"] == 22 * 64 * 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_analytic_flops_positive(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES:
+        ok, _ = cfg.shape_supported(shape)
+        if not ok:
+            continue
+        f = analytic_flops(cfg, shape)
+        mf = model_flops(cfg, shape)
+        assert f > 0 and mf > 0
+        if SHAPES[shape]["kind"] == "train":
+            assert f > mf * 0.5  # fwd+bwd+remat must dominate 6ND·(2/3)
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = cfg.shape_supported(shape)
+            if not ok:
+                continue
+            batch = steps_lib.input_specs(cfg, shape)
+            assert batch, (arch, shape)
+            params, aux = steps_lib.abstract_state(cfg, shape)
+            assert params
+
+
+def test_farm_results_all_cells_ok():
+    """The multi-pod dry-run deliverable: every (arch × shape × mesh) cell
+    must be OK or an explicitly documented SKIP."""
+    res = Path(__file__).resolve().parent.parent / "results"
+    if not res.exists():
+        pytest.skip("farm results not present")
+    recs = [json.loads(p.read_text()) for p in res.glob("*__baseline.json")]
+    if len(recs) < 80:
+        pytest.skip(f"farm incomplete: {len(recs)}/80")
+    bad = [(r["arch"], r["shape"], r["mesh"]) for r in recs
+           if r["status"] not in ("OK", "SKIP")]
+    assert not bad, bad
+    oks = [r for r in recs if r["status"] == "OK"]
+    assert len(oks) >= 60
+    for r in oks:
+        assert r["collectives"]["total_bytes"] >= 0
+        assert r["roofline"]["dominant"] in ("compute", "memory",
+                                             "collective")

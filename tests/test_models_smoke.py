@@ -1,0 +1,137 @@
+"""Per-architecture smoke: reduced config, one forward/train/decode step on
+CPU asserting output shapes + no NaNs (full configs are dry-run only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import steps as steps_lib
+from repro.nn import transformer as tfm
+from repro.optim import OptConfig, adamw_init
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    batch = {}
+    if cfg.frontend == "audio":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.bfloat16)
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    elif cfg.frontend == "vision":
+        st = S - cfg.n_patches
+        batch["tokens"] = jax.random.randint(key, (B, st), 0, cfg.vocab)
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        batch["labels"] = jax.random.randint(key, (B, st), 0, cfg.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(key, cfg)
+    batch = _batch(cfg, key)
+
+    logits = tfm.forward(params, batch, cfg)
+    lab_s = S - cfg.n_patches if cfg.frontend == "vision" else S
+    exp_s = S if cfg.frontend != "vision" else S
+    assert logits.shape == (B, exp_s, cfg.vocab) or \
+        logits.shape == (B, lab_s + cfg.n_patches, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+    step = steps_lib.make_train_step(cfg, OptConfig(warmup_steps=2))
+    p2, o2, m = jax.jit(step)(params, adamw_init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    # params actually changed
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(p2)[0]
+    assert not np.array_equal(np.asarray(d0, np.float32),
+                              np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_config(a).supports_decode])
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(key, cfg)
+    cache = tfm.init_cache(cfg, B, 64)
+    step = jax.jit(steps_lib.make_decode_step(cfg))
+    toks = jnp.zeros((B, 1), jnp.int32)
+    for pos in range(3):
+        logits, cache = step(params, cache,
+                             {"tokens": toks,
+                              "pos": jnp.asarray(pos, jnp.int32)})
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_decode_matches_prefill_tinyllama():
+    """Causal consistency: token-by-token decode logits == full forward."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    key = jax.random.PRNGKey(1)
+    params = tfm.init_params(key, cfg)
+    toks = jax.random.randint(key, (1, 8), 0, cfg.vocab)
+    full = tfm.forward(params, {"tokens": toks}, cfg).astype(jnp.float32)
+
+    cache = tfm.init_cache(cfg, 1, 16)
+    step = jax.jit(steps_lib.make_decode_step(cfg))
+    outs = []
+    for pos in range(8):
+        lg, cache = step(params, cache,
+                         {"tokens": toks[:, pos:pos + 1],
+                          "pos": jnp.asarray(pos, jnp.int32)})
+        outs.append(np.asarray(lg[:, 0], np.float32))
+    dec = np.stack(outs, axis=1)
+    err = np.abs(dec - np.asarray(full)).max()
+    assert err < 0.15, f"decode diverges from prefill: {err}"
+
+
+def test_mamba2_decode_matches_prefill():
+    cfg = get_config("mamba2-1.3b").reduced()
+    key = jax.random.PRNGKey(2)
+    params = tfm.init_params(key, cfg)
+    toks = jax.random.randint(key, (1, 8), 0, cfg.vocab)
+    full = tfm.forward(params, {"tokens": toks}, cfg).astype(jnp.float32)
+    cache = tfm.init_cache(cfg, 1, 16)
+    step = jax.jit(steps_lib.make_decode_step(cfg))
+    outs = []
+    for pos in range(8):
+        lg, cache = step(params, cache,
+                         {"tokens": toks[:, pos:pos + 1],
+                          "pos": jnp.asarray(pos, jnp.int32)})
+        outs.append(np.asarray(lg[:, 0], np.float32))
+    dec = np.stack(outs, axis=1)
+    err = np.abs(dec - np.asarray(full)).max()
+    assert err < 0.25, f"SSD decode diverges from chunked prefill: {err}"
+
+
+def test_param_counts_sane():
+    """Analytic param_count within 25% of actual full-config leaf sums is
+    infeasible to check (no alloc); check the reduced configs instead."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).reduced()
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert 0.5 < est / actual < 2.0, \
+            f"{arch}: analytic {est} vs actual {actual}"
+
+
+def test_full_config_param_counts():
+    """Full configs land near their nameplate sizes."""
+    expect = {"tinyllama-1.1b": 1.1e9, "deepseek-67b": 67e9,
+              "deepseek-v2-236b": 236e9, "deepseek-v3-671b": 671e9,
+              "pixtral-12b": 12e9, "mamba2-1.3b": 1.3e9,
+              "jamba-v0.1-52b": 52e9, "minitron-4b": 4e9,
+              "phi3-mini-3.8b": 3.8e9, "hubert-xlarge": 1e9}
+    for arch, nominal in expect.items():
+        n = get_config(arch).param_count()
+        assert 0.55 < n / nominal < 1.8, f"{arch}: {n/1e9:.2f}B vs {nominal/1e9}B"

@@ -1,0 +1,98 @@
+"""BN fusing, maxpool (fused + tournament), softmax, rmsnorm, argmax."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Parties, reconstruct, secure_argmax_onehot,
+                        secure_exp, secure_max_lastdim, secure_maxpool,
+                        secure_rmsnorm, secure_softmax, share,
+                        sign_maxpool_fused, fuse_bn_linear,
+                        fuse_bn_sign_threshold)
+from repro.core.ring import RING32
+from repro.core.rss import RSS
+
+
+def test_fuse_bn_linear_matches_bn():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(8, 4)).astype(np.float32)
+    b = rng.normal(size=(4,)).astype(np.float32)
+    g = rng.uniform(0.5, 2, 4).astype(np.float32)
+    beta = rng.normal(size=(4,)).astype(np.float32)
+    mu = rng.normal(size=(4,)).astype(np.float32)
+    var = rng.uniform(0.5, 2, 4).astype(np.float32)
+    x = rng.normal(size=(5, 8)).astype(np.float32)
+    wf, bf = fuse_bn_linear(w, b, g, beta, mu, var)
+    want = (x @ w + b - mu) / np.sqrt(var + 1e-5) * g + beta
+    got = x @ wf + bf
+    assert np.abs(got - want).max() < 1e-4
+
+
+def test_fuse_bn_sign_threshold():
+    rng = np.random.default_rng(1)
+    g = rng.uniform(0.5, 2, 6).astype(np.float32)
+    beta = rng.normal(size=(6,)).astype(np.float32)
+    mu = rng.normal(size=(6,)).astype(np.float32)
+    var = rng.uniform(0.5, 2, 6).astype(np.float32)
+    x = rng.normal(size=(100, 6)).astype(np.float32)
+    t = fuse_bn_sign_threshold(g, beta, mu, var)
+    want = np.sign((x - mu) / np.sqrt(var + 1e-5) * g + beta) >= 0
+    got = np.sign(x + t) >= 0
+    assert (got == want).mean() > 0.999
+
+
+def test_sign_maxpool_fused(key, ring, parties):
+    bits = (jax.random.uniform(key, (2, 4, 4, 3)) > 0.5).astype(np.int32)
+    x = RSS(ring.encode_int(bits) + parties.zero_shares((2, 4, 4, 3), ring),
+            ring)
+    got = reconstruct(sign_maxpool_fused(x, parties, pool=2), decode=False)
+    want = np.asarray(bits).reshape(2, 2, 2, 2, 2, 3).max(axis=(2, 4))
+    assert np.array_equal(np.asarray(got), want.astype(np.uint32))
+
+
+def test_secure_maxpool_tournament(key, ring, parties):
+    img = jax.random.normal(key, (2, 4, 4, 3)) * 3
+    got = reconstruct(secure_maxpool(share(img, key, ring), parties, pool=2))
+    want = np.asarray(img).reshape(2, 2, 2, 2, 2, 3).max(axis=(2, 4))
+    assert np.abs(np.asarray(got) - want).max() < 2e-3
+
+
+def test_secure_max_lastdim(key, ring, parties):
+    x = jax.random.normal(key, (8, 7)) * 4  # odd length exercises the tail
+    got = reconstruct(secure_max_lastdim(share(x, key, ring), parties))
+    assert np.abs(np.asarray(got)[:, 0]
+                  - np.asarray(x).max(-1)).max() < 3e-3
+
+
+def test_secure_exp(key, ring, parties):
+    z = -jax.random.uniform(key, (64,)) * 8
+    got = reconstruct(secure_exp(share(z, key, ring), parties))
+    # (1+z/2^k)^{2^k} with k=6 + f=12 fixed point: ~5e-2 worst case
+    assert np.abs(np.asarray(got) - np.exp(np.asarray(z))).max() < 0.06
+
+
+def test_secure_softmax(key, ring, parties):
+    x = jax.random.normal(key, (4, 8)) * 2
+    got = reconstruct(secure_softmax(share(x, key, ring), parties))
+    want = np.asarray(jax.nn.softmax(x, axis=-1))
+    assert np.abs(np.asarray(got) - want).max() < 0.02
+    assert np.abs(np.asarray(got).sum(-1) - 1).max() < 0.05
+
+
+def test_secure_rmsnorm(key, ring, parties):
+    x = jax.random.normal(key, (4, 32))
+    g = np.ones((32,), np.float32)
+    got = reconstruct(secure_rmsnorm(share(x, key, ring),
+                                     share(g, jax.random.fold_in(key, 1),
+                                           ring), parties))
+    xf = np.asarray(x)
+    want = xf / np.sqrt((xf * xf).mean(-1, keepdims=True) + 1e-5)
+    assert np.abs(np.asarray(got) - want).max() < 0.08
+
+
+def test_secure_argmax_onehot(key, ring, parties):
+    x = jax.random.normal(key, (16, 10)) * 3
+    got = reconstruct(secure_argmax_onehot(share(x, key, ring), parties),
+                      decode=False)
+    want = np.zeros((16, 10), np.uint32)
+    want[np.arange(16), np.asarray(x).argmax(-1)] = 1
+    assert np.array_equal(np.asarray(got), want)

@@ -1,0 +1,92 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (RING32, Parties, msb_extract, mul, reconstruct,
+                        reconstruct_bits, share, truncate)
+from repro.core.rss import RSS
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@given(st.lists(st.integers(-2**30, 2**30 - 1), min_size=1, max_size=32),
+       st.integers(0, 2**31))
+@SET
+def test_ring_share_roundtrip_exact(vals, seed):
+    ring = RING32
+    v = ring.encode_int(jnp.asarray(vals, jnp.int32))
+    xs = share(v, jax.random.PRNGKey(seed), ring, encoded=True)
+    assert np.array_equal(np.asarray(reconstruct(xs, decode=False)),
+                          np.asarray(v))
+
+
+@given(st.lists(st.floats(-30, 30, allow_nan=False), min_size=1,
+                max_size=16), st.integers(0, 1000))
+@SET
+def test_fixed_point_roundtrip(vals, seed):
+    ring = RING32
+    x = jnp.asarray(vals, jnp.float32)
+    xs = share(x, jax.random.PRNGKey(seed), ring)
+    assert np.abs(np.asarray(reconstruct(xs))
+                  - np.asarray(x)).max() <= 2.0 ** -ring.frac + 1e-6
+
+
+@given(st.lists(st.floats(-28, 28, allow_nan=False), min_size=1,
+                max_size=16), st.integers(0, 1000))
+@SET
+def test_truncate_error_bound(vals, seed):
+    """Exact-trunc invariant: error ≤ 4 ulp, never the 2^{l-f} wrap."""
+    ring = RING32
+    parties = Parties.setup(jax.random.PRNGKey(seed + 1))
+    x = jnp.asarray(vals, jnp.float32)
+    xs = share(x, jax.random.PRNGKey(seed), ring)
+    lifted = RSS(xs.shares << jnp.asarray(ring.frac, ring.dtype), ring)
+    got = np.asarray(reconstruct(truncate(lifted, parties)))
+    assert np.abs(got - np.asarray(x)).max() <= 5 * 2.0 ** -ring.frac
+
+
+@given(st.lists(st.floats(-31, 31, allow_nan=False), min_size=1,
+                max_size=32), st.integers(0, 1000))
+@SET
+def test_msb_matches_sign(vals, seed):
+    ring = RING32
+    parties = Parties.setup(jax.random.PRNGKey(seed + 1))
+    x = jnp.asarray(vals, jnp.float32)
+    m = msb_extract(share(x, jax.random.PRNGKey(seed), ring), parties)
+    enc = np.asarray(ring.encode(x)).astype(np.uint32)
+    want = (enc >> 31).astype(np.uint8)
+    assert np.array_equal(np.asarray(reconstruct_bits(m)), want)
+
+
+@given(st.lists(st.floats(-4, 4, allow_nan=False), min_size=2, max_size=12),
+       st.integers(0, 500))
+@SET
+def test_mul_linearity(vals, seed):
+    """(x+y)·z == x·z + y·z under the protocol (distributivity survives
+    sharing, masking, reshare and truncation up to ulp error)."""
+    ring = RING32
+    parties = Parties.setup(jax.random.PRNGKey(seed + 1))
+    n = len(vals) // 2
+    if n == 0:
+        return
+    x = jnp.asarray(vals[:n], jnp.float32)
+    y = jnp.asarray(vals[n:2 * n], jnp.float32)
+    z = jnp.asarray(vals[:n][::-1], jnp.float32)
+    kx, ky, kz = (jax.random.PRNGKey(seed + i) for i in range(3))
+    xs, ys, zs = share(x, kx, ring), share(y, ky, ring), share(z, kz, ring)
+    lhs = reconstruct(truncate(mul(xs + ys, zs, parties), parties))
+    r1 = truncate(mul(xs, zs, parties), parties)
+    r2 = truncate(mul(ys, zs, parties), parties)
+    rhs = reconstruct(r1 + r2)
+    assert np.abs(np.asarray(lhs) - np.asarray(rhs)).max() < 4e-3
+
+
+@given(st.integers(0, 10**6))
+@SET
+def test_zero_share_invariant(seed):
+    parties = Parties.setup(jax.random.PRNGKey(seed))
+    a = parties.zero_shares((7,), RING32)
+    assert np.array_equal(np.asarray(a.sum(0)),
+                          np.zeros(7, RING32.np_dtype()))

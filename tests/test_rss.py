@@ -1,0 +1,116 @@
+"""RSS sharing + linear protocol correctness vs plaintext."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (RING32, Parties, conv2d, matmul, mul, reconstruct,
+                        share, square, truncate, set_matmul_mode)
+from repro.core.linear import truncate_probabilistic
+from repro.core.rss import RSS
+
+
+def test_share_reconstruct_exact_ring(key, ring):
+    x = jnp.arange(-50, 50, dtype=jnp.int32)
+    xs = share(ring.encode_int(x), key, ring, encoded=True)
+    got = reconstruct(xs, decode=False)
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(ring.encode_int(x)))
+
+
+def test_share_reconstruct_fixed_point(key, ring):
+    x = jax.random.normal(key, (32, 7)) * 5
+    xs = share(x, key, ring)
+    assert np.abs(np.asarray(reconstruct(xs)) - np.asarray(x)).max() < 1e-3
+
+
+def test_add_sub_neg_public(key, ring, parties):
+    x = jax.random.normal(key, (16,)) * 2
+    y = jax.random.normal(jax.random.fold_in(key, 1), (16,)) * 2
+    xs = share(x, key, ring)
+    ys = share(y, jax.random.fold_in(key, 2), ring)
+    assert np.allclose(reconstruct(xs + ys), np.asarray(x + y), atol=1e-3)
+    assert np.allclose(reconstruct(xs - ys), np.asarray(x - y), atol=1e-3)
+    assert np.allclose(reconstruct(-xs), -np.asarray(x), atol=1e-3)
+    assert np.allclose(reconstruct(xs.add_public(jnp.float32(1.5))),
+                       np.asarray(x) + 1.5, atol=1e-3)
+    assert np.allclose(reconstruct(xs.mul_public_int(3)),
+                       np.asarray(x) * 3, atol=1e-2)
+
+
+@pytest.mark.parametrize("mode", ["opt2", "paper3"])
+def test_mul_modes_match(key, ring, parties, mode):
+    set_matmul_mode(mode)
+    try:
+        # keep |x·y| inside the exact-trunc headroom (< 2^{l-2-2f} = 64)
+        x = jax.random.normal(key, (64,)) * 2
+        y = jax.random.normal(jax.random.fold_in(key, 1), (64,)) * 2
+        xs = share(x, key, ring)
+        ys = share(y, jax.random.fold_in(key, 2), ring)
+        got = reconstruct(truncate(mul(xs, ys, parties), parties))
+        assert np.abs(np.asarray(got) - np.asarray(x * y)).max() < 2e-3
+    finally:
+        set_matmul_mode("opt2")
+
+
+def test_square(key, ring, parties):
+    x = jax.random.normal(key, (64,)) * 2.5
+    xs = share(x, key, ring)
+    got = reconstruct(truncate(square(xs, parties), parties))
+    assert np.abs(np.asarray(got) - np.asarray(x) ** 2).max() < 4e-3
+
+
+def test_matmul_vs_plaintext(key, ring, parties):
+    a = jax.random.normal(key, (9, 33))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (33, 17))
+    as_ = share(a, key, ring)
+    bs_ = share(b, jax.random.fold_in(key, 2), ring)
+    got = reconstruct(truncate(matmul(as_, bs_, parties), parties))
+    assert np.abs(np.asarray(got) - np.asarray(a @ b)).max() < 2e-2
+
+
+def test_conv2d_vs_lax_conv(key, ring, parties):
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 3, 5)) * 0.5
+    xs = share(x, key, ring)
+    ws = share(w, jax.random.fold_in(key, 2), ring)
+    got = reconstruct(truncate(
+        conv2d(xs, ws, parties, stride=1, padding=1), parties))
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() < 2e-2
+
+
+def test_depthwise_conv(key, ring, parties):
+    x = jax.random.normal(key, (2, 6, 6, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 1, 4)) * 0.5
+    xs = share(x, key, ring)
+    ws = share(w, jax.random.fold_in(key, 2), ring)
+    got = reconstruct(truncate(
+        conv2d(xs, ws, parties, padding=1, groups=4), parties))
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=4)
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() < 2e-2
+
+
+def test_truncate_exact_never_catastrophic(key, ring, parties):
+    """The statistical-masking trunc must never produce 2^{l-f} errors."""
+    # |value| must stay inside the wrap-free window 2^{l-2-2f} = 64 at f=12
+    x = jax.random.normal(key, (4096,)) * 12
+    xs = share(x, key, ring)
+    doubled = RSS(xs.shares << jnp.asarray(ring.frac, ring.dtype), ring)
+    got = reconstruct(truncate(doubled, parties))
+    err = np.abs(np.asarray(got) - np.asarray(x))
+    assert err.max() < 8e-3  # ≤ ~4 ulp; a wrap would show as ~64
+
+
+def test_truncate_probabilistic_reference(key, ring, parties):
+    """ABY3-style trunc: correct for small-magnitude values."""
+    x = jax.random.normal(key, (256,)) * 0.01
+    xs = share(x, key, ring)
+    doubled = RSS(xs.shares << jnp.asarray(ring.frac, ring.dtype), ring)
+    got = reconstruct(truncate_probabilistic(doubled, parties))
+    err = np.abs(np.asarray(got) - np.asarray(x))
+    assert np.median(err) < 1e-3
