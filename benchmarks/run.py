@@ -2,13 +2,18 @@
 the kernel microbenchmarks, secure-LM customization sweep, and the roofline
 table from the dry-run farm.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table1,kernels,...]
+    PYTHONPATH=src python -m benchmarks.run [--only table1,kernels,...] \
+        [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+``--json PATH`` additionally writes the rows as a machine-readable
+{name: us_per_call} map (e.g. BENCH_kernels.json) so the perf trajectory
+is diffable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -18,6 +23,8 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: table1,table2,table3,"
                          "kernels,secure_lm,roofline")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write {name: us_per_call} JSON to PATH")
     args = ap.parse_args()
     want = set(filter(None, args.only.split(",")))
 
@@ -35,6 +42,7 @@ def main() -> None:
     }
     print("name,us_per_call,derived")
     failures = 0
+    collected: dict[str, float] = {}
     for name, fn in suites.items():
         if want and name not in want:
             continue
@@ -42,10 +50,16 @@ def main() -> None:
             for row in fn():
                 n, us, derived = row
                 print(f"{n},{us:.1f},{derived}")
+                collected[n] = round(float(us), 3)
         except Exception:
             failures += 1
             print(f"{name},ERROR,{traceback.format_exc(limit=1)!r}",
                   file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(collected)} rows to {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -15,15 +15,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from . import comm
-from .linear import _reshare
-from .msb import msb_extract, DEFAULT_BOUND_BITS
+from .linear import _reshare, fused_rounds, mul
+from .msb import msb_extract, msb_extract_arith, DEFAULT_BOUND_BITS
 from .ot import ot3
 from .randomness import Parties
 from .ring import RingSpec
 from .rss import RSS, BinRSS, PARTIES
 
 __all__ = ["secure_sign", "secure_relu", "sign_from_msb", "relu_from_msb",
-           "select_from_msb"]
+           "sign_from_msb_arith", "relu_from_msb_arith", "select_from_msb"]
 
 
 def sign_from_msb(msb: BinRSS, parties: Parties, ring: RingSpec,
@@ -54,10 +54,36 @@ def sign_from_msb(msb: BinRSS, parties: Parties, ring: RingSpec,
     return RSS(jnp.stack([mc, beta1, beta2]), ring)
 
 
+def sign_from_msb_arith(msb_a: RSS) -> RSS:
+    """Fused-round Alg 4 (beyond-paper, §Perf): with [MSB]^A already in hand
+    (msb_extract_arith derives it locally from the offline [β]^A and the
+    public β'), the {0,1} Sign indicator is just  1 − [MSB]^A  — ZERO online
+    rounds and zero bytes vs the OT path's 3 rounds / 4 elements."""
+    ring = msb_a.ring
+    return (-msb_a).add_public(jnp.asarray(1, ring.dtype))
+
+
+def relu_from_msb_arith(x: RSS, msb_a: RSS, parties: Parties,
+                        tag: str = "relu") -> RSS:
+    """Fused-round Alg 5 (beyond-paper): ReLU(x) = (1 − [MSB]^A)·x as ONE
+    secure mult round — replaces the two bit×value OTs (2 rounds) + reshare.
+    The gate is a {0,1} integer (scale 0), so the product keeps x's scale
+    and needs no truncation."""
+    gate = sign_from_msb_arith(msb_a)
+    return mul(gate, x, parties, tag=tag + ".gate")
+
+
 def secure_sign(x: RSS, parties: Parties,
                 bound_bits: int = DEFAULT_BOUND_BITS,
                 tag: str = "sign") -> RSS:
-    """Sign activation: MSB extraction (Alg 3) + Alg 4.  Output ∈ {0,1}."""
+    """Sign activation: MSB extraction (Alg 3) + Alg 4.  Output ∈ {0,1}.
+
+    Fused default: 1 online round total (the MSB multiply-open) — the Alg-4
+    OT conversion is replaced by the local affine on [MSB]^A."""
+    if fused_rounds():
+        _, msb_a = msb_extract_arith(x, parties, bound_bits=bound_bits,
+                                     tag=tag + ".msb")
+        return sign_from_msb_arith(msb_a)
     msb = msb_extract(x, parties, bound_bits=bound_bits, tag=tag + ".msb")
     return sign_from_msb(msb, parties, x.ring, tag=tag)
 
@@ -117,7 +143,12 @@ def relu_from_msb(x: RSS, msb: BinRSS, parties: Parties,
 def secure_relu(x: RSS, parties: Parties,
                 bound_bits: int = DEFAULT_BOUND_BITS,
                 tag: str = "relu") -> RSS:
-    """Full secure ReLU: Alg 3 (2 online rounds) + Alg 5 (3 rounds)."""
+    """Full secure ReLU: Alg 3 (2 online rounds) + Alg 5 (3 rounds);
+    fused default: 2 online rounds total (multiply-open + gate mult)."""
+    if fused_rounds():
+        _, msb_a = msb_extract_arith(x, parties, bound_bits=bound_bits,
+                                     tag=tag + ".msb")
+        return relu_from_msb_arith(x, msb_a, parties, tag=tag)
     msb = msb_extract(x, parties, bound_bits=bound_bits, tag=tag + ".msb")
     return relu_from_msb(x, msb, parties, tag=tag)
 

@@ -25,13 +25,17 @@ from .rss import RSS, PARTIES
 
 __all__ = ["reveal", "mul", "matmul", "conv2d", "truncate",
            "truncate_probabilistic", "linear_layer", "square",
-           "set_matmul_mode"]
+           "set_matmul_mode", "set_fused_rounds", "fused_rounds",
+           "mul_open", "matmul_truncate", "conv2d_truncate", "mul_truncate",
+           "square_truncate"]
 
 # "opt2" = fused-operand (2 matmuls/party); "paper3" = Algorithm 2 verbatim.
 _MATMUL_MODE = "opt2"
-# round-fused protocol variants (mul_open / matmul_truncate): beyond-paper;
-# False = paper-faithful round structure.
-_FUSED_ROUNDS = False
+# Round-fused protocol variants (mul_open / matmul_truncate / local Sign
+# conversion): beyond-paper, ON by default — every linear layer's trunc and
+# every MSB multiply-open ride the layer's reshare round (2 rounds -> 1).
+# set_fused_rounds(False) restores the paper-faithful round structure.
+_FUSED_ROUNDS = True
 
 
 def set_matmul_mode(mode: str):
@@ -94,16 +98,19 @@ def _align_party_axis(xs, ys):
     return xs, ys
 
 
+def _mul_parts(xs, ys):
+    """Elementwise additive product stack z_i, honoring the matmul mode."""
+    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
+    if _MATMUL_MODE == "opt2":
+        return xs * (ys + yn) + xn * ys
+    return xs * ys + xn * ys + xs * yn
+
+
 def mul(x: RSS, y: RSS, parties: Parties, tag: str = "mul") -> RSS:
     """Elementwise secure multiplication. Output scale = sum of input scales
     (caller truncates when both operands are fixed-point)."""
     xs, ys = _align_party_axis(x.shares, y.shares)
-    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
-    if _MATMUL_MODE == "opt2":
-        z = xs * (ys + yn) + xn * ys
-    else:
-        z = xs * ys + xn * ys + xs * yn
-    return _reshare(z, x.ring, parties, tag)
+    return _reshare(_mul_parts(xs, ys), x.ring, parties, tag)
 
 
 def square(x: RSS, parties: Parties, tag: str = "square") -> RSS:
@@ -121,25 +128,38 @@ def _ring_dot(a, b, ring: RingSpec):
         preferred_element_type=ring.dtype)
 
 
-def matmul(x: RSS, w: RSS, parties: Parties, tag: str = "matmul",
-           dot=None) -> RSS:
-    """Secure matmul  z = x @ w  (x: (..., K), w: (K, N)).
+def _matmul_parts(x: RSS, w: RSS | None, dot, w_limbs) -> jax.Array:
+    """Additive product stack z_i (3, ..., N) — local compute, no comm.
 
-    ``dot`` may be swapped for the Pallas ring-matmul kernel
-    (kernels/ops.py::ring_matmul) — same contract: uintL x uintL -> uintL
-    mod 2^l.
-    """
+    With ``w_limbs`` (a kernels.rss_matmul.WeightLimbs cached at model
+    setup) the whole 3-party product runs in ONE fused Pallas launch:
+    activations are limb-decomposed once per share slab, weight limbs
+    (including the fused operand w_i + w_{i+1}) come precomputed."""
+    if w_limbs is not None:
+        from ..kernels.ops import rss_matmul_parts_op
+        return rss_matmul_parts_op(x.shares, w_limbs)
     dot = dot or (lambda a, b: _ring_dot(a, b, x.ring))
     xs, ws = x.shares, w.shares
     xn, wn = jnp.roll(xs, -1, axis=0), jnp.roll(ws, -1, axis=0)
     if _MATMUL_MODE == "opt2":
         # z_i = x_i @ (w_i + w_{i+1}) + x_{i+1} @ w_i      (2 matmuls/party)
-        z = jnp.stack([dot(xs[i], ws[i] + wn[i]) + dot(xn[i], ws[i])
-                       for i in range(PARTIES)])
-    else:
-        # Algorithm 2 verbatim                              (3 matmuls/party)
-        z = jnp.stack([dot(xs[i], ws[i]) + dot(xn[i], ws[i]) + dot(xs[i], wn[i])
-                       for i in range(PARTIES)])
+        return jnp.stack([dot(xs[i], ws[i] + wn[i]) + dot(xn[i], ws[i])
+                          for i in range(PARTIES)])
+    # Algorithm 2 verbatim                                  (3 matmuls/party)
+    return jnp.stack([dot(xs[i], ws[i]) + dot(xn[i], ws[i])
+                      + dot(xs[i], wn[i]) for i in range(PARTIES)])
+
+
+def matmul(x: RSS, w: RSS | None, parties: Parties, tag: str = "matmul",
+           dot=None, w_limbs=None) -> RSS:
+    """Secure matmul  z = x @ w  (x: (..., K), w: (K, N)).
+
+    ``dot`` may be swapped for the Pallas ring-matmul kernel
+    (kernels/ops.py::ring_matmul) — same contract: uintL x uintL -> uintL
+    mod 2^l.  ``w_limbs`` routes through the fused 3-party kernel with
+    cached weight limbs instead (w may then be None).
+    """
+    z = _matmul_parts(x, w, dot, w_limbs)
     return _reshare(z, x.ring, parties, tag)
 
 
@@ -155,8 +175,7 @@ def mul_open(x: RSS, y: RSS, parties: Parties, tag: str = "mul_open"):
     and everyone sums.  1 round / 6 elements vs mul(1r/3el)+reveal(1r/3el).
     """
     xs, ys = _align_party_axis(x.shares, y.shares)
-    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
-    z = xs * (ys + yn) + xn * ys
+    z = _mul_parts(xs, ys)
     z = z + parties.zero_shares(z.shape[1:], x.ring)
     n = 1
     for d in z.shape[1:]:
@@ -166,8 +185,9 @@ def mul_open(x: RSS, y: RSS, parties: Parties, tag: str = "mul_open"):
     return z[0] + z[1] + z[2]
 
 
-def matmul_truncate(x: RSS, w: RSS, parties: Parties,
-                    tag: str = "matmul_tr", dot=None) -> RSS:
+def matmul_truncate(x: RSS, w: RSS | None, parties: Parties,
+                    tag: str = "matmul_tr", dot=None, w_limbs=None,
+                    bias_parts=None) -> RSS:
     """Fused Alg-2 matmul + Π_trunc in ONE online round (beyond-paper).
 
     The reshare round already moves one ring element per output slot; the
@@ -176,27 +196,42 @@ def matmul_truncate(x: RSS, w: RSS, parties: Parties,
     and broadcast  c_i = z_i − r_i + offset_i ; everyone opens c = z − r +
     2^{l−2} locally and finishes the shift exactly as in `truncate`.
     1 round / 6 elements vs matmul(1r/3el)+trunc(1r/3el) = 2 rounds.
+
+    ``bias_parts`` (3, ..., N) additive shares (already lifted to the
+    product's 2f scale) are folded in before the opening, so bias addition
+    costs nothing.  ``w_limbs`` routes the product through the fused
+    3-party Pallas kernel with cached weight limbs.
     """
     ring = x.ring
-    f = ring.frac
-    dot = dot or (lambda a, b: _ring_dot(a, b, ring))
-    xs, ws = x.shares, w.shares
-    xn, wn = jnp.roll(xs, -1, axis=0), jnp.roll(ws, -1, axis=0)
-    if _MATMUL_MODE == "opt2":
-        z = jnp.stack([dot(xs[i], ws[i] + wn[i]) + dot(xn[i], ws[i])
-                       for i in range(PARTIES)])
-    else:
-        z = jnp.stack([dot(xs[i], ws[i]) + dot(xn[i], ws[i]) + dot(xs[i], wn[i])
-                       for i in range(PARTIES)])
-    return _open_shift(z, parties, ring, f, tag)
+    z = _matmul_parts(x, w, dot, w_limbs)
+    if bias_parts is not None:
+        z = z + bias_parts
+    return _open_shift(z, parties, ring, ring.frac, tag)
+
+
+def _trunc_pair(shape, parties: Parties, ring: RingSpec, f: int):
+    """Offline exact-trunc pair ([r], [r >> f]): additive shares
+    r_i ~ U[0, 2^{l-3}) from the PRF, so shares of r >> f are the local
+    shifts (no carries can wrap).  Shared by `truncate` and the fused ops —
+    the correctness-critical constants live only here and _trunc_decode."""
+    r = parties.rand_rss(shape, ring, max_bits=ring.bits - 1)
+    return r, RSS(r.shares >> f, ring)
+
+
+def _trunc_decode(c, ring: RingSpec, f: int):
+    """Public part of the exact truncation: arithmetic-shift the opened
+    c = x + 2^{l-2} − r and compensate the offset bias (+1: see DESIGN.md
+    §10)."""
+    c_shift = (ring.to_signed(c) >> f).astype(ring.dtype)
+    return c_shift - jnp.asarray(1 << (ring.bits - 2 - f), ring.dtype) \
+        + jnp.asarray(1, ring.dtype)
 
 
 def _open_shift(z, parties: Parties, ring: RingSpec, f: int, tag: str) -> RSS:
     """Shared tail of the fused ops: mask additive parts with the bounded
     trunc pair, broadcast, open, arithmetic-shift.  One round, 6 elements."""
     z = z + parties.zero_shares(z.shape[1:], ring)
-    r = parties.rand_rss(z.shape[1:], ring, max_bits=ring.bits - 1)
-    rp = RSS(r.shares >> f, ring)
+    r, rp = _trunc_pair(z.shape[1:], parties, ring, f)
     offset = jnp.asarray(1 << (ring.bits - 2), ring.dtype)
     c_parts = z - r.shares
     n = 1
@@ -204,10 +239,7 @@ def _open_shift(z, parties: Parties, ring: RingSpec, f: int, tag: str) -> RSS:
         n *= int(d)
     comm.record(tag, rounds=1, nbytes=6 * n * ring.nbytes)
     c = c_parts[0] + c_parts[1] + c_parts[2] + offset
-    c_shift = (ring.to_signed(c) >> f).astype(ring.dtype)
-    public = c_shift - jnp.asarray(1 << (ring.bits - 2 - f), ring.dtype) \
-        + jnp.asarray(1, ring.dtype)
-    return rp.add_public(public)
+    return rp.add_public(_trunc_decode(c, ring, f))
 
 
 def mul_truncate(x: RSS, y: RSS, parties: Parties, frac: int | None = None,
@@ -215,8 +247,7 @@ def mul_truncate(x: RSS, y: RSS, parties: Parties, frac: int | None = None,
     """Fused elementwise multiply + truncate, one online round."""
     ring = x.ring
     xs, ys = _align_party_axis(x.shares, y.shares)
-    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
-    z = xs * (ys + yn) + xn * ys
+    z = _mul_parts(xs, ys)
     return _open_shift(z, parties, ring, ring.frac if frac is None else frac,
                        tag)
 
@@ -255,13 +286,18 @@ def _im2col(x, kh: int, kw: int, stride: int, padding: int):
 
 
 def conv2d(x: RSS, w: RSS, parties: Parties, stride: int = 1,
-           padding: int = 0, groups: int = 1, tag: str = "conv") -> RSS:
-    """Secure 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin/groups,Cout)."""
+           padding: int = 0, groups: int = 1, tag: str = "conv",
+           w_limbs=None) -> RSS:
+    """Secure 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin/groups,Cout).
+
+    ``w_limbs`` holds cached limbs of the (kh·kw·Cin, Cout) weight matrix
+    (groups == 1 only) — the im2col patches then run through the fused
+    3-party kernel."""
     kh, kw, cin_g, cout = (int(d) for d in w.shape)
     if groups == 1:
         cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
         wmat = w.reshape(kh * kw * cin_g, cout)
-        return matmul(cols, wmat, parties, tag=tag)
+        return matmul(cols, wmat, parties, tag=tag, w_limbs=w_limbs)
     # Depthwise (groups == Cin, cin_g == 1): per-channel conv, still one
     # reshare round for the whole layer.
     b = int(x.shape[0])
@@ -293,6 +329,18 @@ def _im2col_rss(x: RSS, kh, kw, stride, padding):
     return RSS(cols, x.ring), ho, wo
 
 
+def conv2d_truncate(x: RSS, w: RSS, parties: Parties, stride: int = 1,
+                    padding: int = 0, tag: str = "conv_tr", w_limbs=None,
+                    bias_parts=None) -> RSS:
+    """Fused conv (groups=1) + bias + Π_trunc, one online round: im2col then
+    `matmul_truncate`."""
+    kh, kw, cin_g, cout = (int(d) for d in w.shape)
+    cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin_g, cout)
+    return matmul_truncate(cols, wmat, parties, tag=tag, w_limbs=w_limbs,
+                           bias_parts=bias_parts)
+
+
 # ---------------------------------------------------------------------------
 # Truncation (ABY3 Π_trunc1-style; paper §3.3)
 # ---------------------------------------------------------------------------
@@ -320,19 +368,14 @@ def truncate(x: RSS, parties: Parties, frac: int | None = None,
     """
     ring = x.ring
     f = ring.frac if frac is None else frac
-    shape = x.shape
 
     # ---- offline pair ([r], [r >> f]) — local, zero traffic --------------
-    r = parties.rand_rss(shape, ring, max_bits=ring.bits - 1)  # r_i < 2^{l-3}
-    rp = RSS(r.shares >> f, ring)  # shares positive ⇒ logical == arithmetic
+    r, rp = _trunc_pair(x.shape, parties, ring, f)
 
     # ---- online ----------------------------------------------------------
     offset = jnp.asarray(1 << (ring.bits - 2), ring.dtype)
     c = reveal(x.add_public(offset) - r, tag=tag)
-    c_shift = (ring.to_signed(c) >> f).astype(ring.dtype)
-    public = c_shift - jnp.asarray(1 << (ring.bits - 2 - f), ring.dtype) \
-        + jnp.asarray(1, ring.dtype)
-    return rp.add_public(public)
+    return rp.add_public(_trunc_decode(c, ring, f))
 
 
 def truncate_probabilistic(x: RSS, parties: Parties, frac: int | None = None,
@@ -359,11 +402,23 @@ def truncate_probabilistic(x: RSS, parties: Parties, frac: int | None = None,
 # Algorithm 2: complete linear layer (matmul/conv + bias + trunc)
 # ---------------------------------------------------------------------------
 
-def linear_layer(x: RSS, w: RSS, b: RSS | None, parties: Parties,
+def linear_layer(x: RSS, w: RSS | None, b: RSS | None, parties: Parties,
                  truncate_out: bool = True, tag: str = "linear",
-                 dot=None) -> RSS:
-    """z = x @ w + b, truncated back to scale 2^f."""
-    z = matmul(x, w, parties, tag=tag, dot=dot)
+                 dot=None, w_limbs=None) -> RSS:
+    """z = x @ w + b, truncated back to scale 2^f.
+
+    With fused rounds on (the default) the truncation's masked opening
+    rides the matmul's reshare round — 1 online round instead of 2."""
+    if truncate_out and _FUSED_ROUNDS:
+        bias_parts = None
+        if b is not None:
+            # product carries scale 2^{2f}; lift the (scale-f) bias to match
+            bias_parts = (b.shares.reshape(
+                (PARTIES,) + (1,) * (x.ndim - 1) + (-1,))
+                << jnp.asarray(x.ring.frac, x.ring.dtype))
+        return matmul_truncate(x, w, parties, tag=tag, dot=dot,
+                               w_limbs=w_limbs, bias_parts=bias_parts)
+    z = matmul(x, w, parties, tag=tag, dot=dot, w_limbs=w_limbs)
     if b is not None:
         bsh = b.shares.reshape((PARTIES,) + (1,) * (z.ndim - 1) + (-1,))
         if truncate_out:

@@ -32,7 +32,8 @@ from .randomness import Parties
 from .ring import RingSpec
 from .rss import RSS, BinRSS, PARTIES
 
-__all__ = ["b2a", "msb_extract", "a2b_msb", "DEFAULT_BOUND_BITS"]
+__all__ = ["b2a", "msb_extract", "msb_extract_arith", "a2b_msb",
+           "DEFAULT_BOUND_BITS"]
 
 # |x| < 2^18 covers fixed-point activations up to magnitude 32 at f=13.
 DEFAULT_BOUND_BITS = 18
@@ -69,10 +70,9 @@ def b2a(bit: BinRSS, parties: Parties, ring: RingSpec,
     return RSS(z, ring)
 
 
-def msb_extract(x: RSS, parties: Parties,
-                bound_bits: int = DEFAULT_BOUND_BITS,
-                tag: str = "msb") -> BinRSS:
-    """Algorithm 3: binary shares of MSB(x) for |x| < 2^bound_bits."""
+def _msb_core(x: RSS, parties: Parties, bound_bits: int, tag: str):
+    """Algorithm 3 body.  Returns ([β]^B, [β]^A, β') with β' = MSB(u) public;
+    MSB(x) = β ⊕ β'."""
     ring = x.ring
     shape = x.shape
     r_bits = ring.bits - 2 - (bound_bits + 1)
@@ -100,7 +100,37 @@ def msb_extract(x: RSS, parties: Parties,
         u = mul(y, rho, parties, tag=tag + ".mul")      # 1 round online
         u_pub = reveal(u, tag=tag + ".reveal")          # 1 round online
     beta_prime = ring.msb(u_pub)                        # public bit
+    return beta, beta_a, beta_prime
+
+
+def msb_extract(x: RSS, parties: Parties,
+                bound_bits: int = DEFAULT_BOUND_BITS,
+                tag: str = "msb") -> BinRSS:
+    """Algorithm 3: binary shares of MSB(x) for |x| < 2^bound_bits."""
+    beta, _, beta_prime = _msb_core(x, parties, bound_bits, tag)
     return beta ^ beta_prime                            # local XOR
+
+
+def msb_extract_arith(x: RSS, parties: Parties,
+                      bound_bits: int = DEFAULT_BOUND_BITS,
+                      tag: str = "msb") -> tuple[BinRSS, RSS]:
+    """MSB(x) as binary AND arithmetic shares for the same online cost.
+
+    Beyond-paper round fusion (§Perf): Algorithm 3 already B2A-converts the
+    offline bit β, and β' is public after the multiply-open — so arithmetic
+    shares of MSB(x) = β ⊕ β' follow LOCALLY from [β]^A:
+
+        [MSB]^A = β' + (1 − 2β')·[β]^A .
+
+    This replaces the online Alg-4 OT (2 rounds + forward) for Sign, and
+    turns ReLU's bit×value OTs into one secure mult — see activation.py.
+    """
+    ring = x.ring
+    beta, beta_a, beta_prime = _msb_core(x, parties, bound_bits, tag)
+    bp = beta_prime.astype(ring.dtype)
+    pm = jnp.asarray(1, ring.dtype) - jnp.asarray(2, ring.dtype) * bp
+    arith = RSS(beta_a.shares * pm, ring).add_public(bp)
+    return beta ^ beta_prime, arith
 
 
 def a2b_msb(x: RSS, parties: Parties,

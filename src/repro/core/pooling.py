@@ -12,12 +12,25 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .activation import relu_from_msb, sign_from_msb
-from .msb import msb_extract, DEFAULT_BOUND_BITS
+from .activation import (relu_from_msb, relu_from_msb_arith, sign_from_msb,
+                         sign_from_msb_arith)
+from .linear import fused_rounds
+from .msb import msb_extract, msb_extract_arith, DEFAULT_BOUND_BITS
 from .randomness import Parties
 from .rss import RSS, PARTIES
 
 __all__ = ["sign_maxpool_fused", "secure_maxpool", "secure_max_lastdim"]
+
+
+def _gated_relu(diff: RSS, parties: Parties, bound_bits: int, tag: str):
+    """ReLU(diff) for the pairwise-max tournaments; fused default uses the
+    arithmetic-MSB one-round gate."""
+    if fused_rounds():
+        _, msb_a = msb_extract_arith(diff, parties, bound_bits=bound_bits,
+                                     tag=tag + ".msb")
+        return relu_from_msb_arith(diff, msb_a, parties, tag=tag + ".sel")
+    msb = msb_extract(diff, parties, bound_bits=bound_bits, tag=tag + ".msb")
+    return relu_from_msb(diff, msb, parties, tag=tag + ".sel")
 
 
 def _window_split(x: RSS, pool: int):
@@ -43,6 +56,10 @@ def sign_maxpool_fused(sign_bits: RSS, parties: Parties, pool: int = 2,
     acc = acc.add_public(jnp.asarray(-1, acc.ring.signed_dtype)
                          .astype(acc.ring.dtype))
     # window sums are tiny integers: tight bound ⇒ max headroom for the mask
+    if fused_rounds():
+        _, msb_a = msb_extract_arith(acc, parties, bound_bits=4,
+                                     tag=tag + ".msb")
+        return sign_from_msb_arith(msb_a)
     msb = msb_extract(acc, parties, bound_bits=4, tag=tag + ".msb")
     return sign_from_msb(msb, parties, acc.ring, tag=tag + ".sign")
 
@@ -58,9 +75,7 @@ def secure_maxpool(x: RSS, parties: Parties, pool: int = 2,
         for i in range(0, len(parts) - 1, 2):
             a, b = parts[i], parts[i + 1]
             diff = a - b
-            msb = msb_extract(diff, parties, bound_bits=bound_bits,
-                              tag=tag + ".msb")
-            nxt.append(b + relu_from_msb(diff, msb, parties, tag=tag + ".sel"))
+            nxt.append(b + _gated_relu(diff, parties, bound_bits, tag))
         if len(parts) % 2:
             nxt.append(parts[-1])
         parts = nxt
@@ -79,9 +94,7 @@ def secure_max_lastdim(x: RSS, parties: Parties,
         a = cur[..., :half]
         b = cur[..., half:2 * half]
         diff = a - b
-        msb = msb_extract(diff, parties, bound_bits=bound_bits,
-                          tag=tag + ".msb")
-        m = b + relu_from_msb(diff, msb, parties, tag=tag + ".sel")
+        m = b + _gated_relu(diff, parties, bound_bits, tag)
         if n % 2:
             m = RSS(jnp.concatenate([m.shares, cur[..., 2 * half:].shares],
                                     axis=-1), x.ring)

@@ -23,11 +23,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.rss_matmul import precompute_weight_limbs
 from ..nn.bnn import ALL_NETS, INPUT_SHAPES, L
 from . import comm
-from .activation import relu_from_msb, sign_from_msb
-from .linear import conv2d, linear_layer, matmul, reveal, truncate
-from .msb import msb_extract
+from .activation import (relu_from_msb, relu_from_msb_arith, sign_from_msb,
+                         sign_from_msb_arith)
+from .linear import (conv2d, conv2d_truncate, fused_rounds, linear_layer,
+                     matmul, matmul_truncate, reveal, truncate)
+from .msb import msb_extract, msb_extract_arith
 from .norm import fuse_bn_linear, fuse_bn_sign_threshold
 from .pooling import secure_maxpool, sign_maxpool_fused
 from .randomness import Parties
@@ -41,6 +44,7 @@ class SecureModel:
     ring: RingSpec
     net: str
     comm_per_query: comm.CommLedger | None = None
+    use_kernel: bool = False
 
 
 def _fold_bn(spec, params, i):
@@ -53,7 +57,13 @@ def compile_secure(params: dict, net: str, key,
                    ring: RingSpec | None = None,
                    use_kernel_dot: bool = False) -> SecureModel:
     """Model-owner setup: fuse + share.  `params` are the trained plaintext
-    parameters (bnn.py layout)."""
+    parameters (bnn.py layout).
+
+    ``use_kernel_dot=True`` additionally pre-decomposes every linear/conv
+    weight-share stack (and its fused operand w_i + w_{i+1}) into cached
+    int8 limbs, so `secure_infer` routes the layer through the single-launch
+    3-party Pallas kernel — weight limbs are never recomputed per query.
+    Depthwise (grouped) convs keep the einsum path (no kernel limbs)."""
     ring = ring or default_ring()
     spec = ALL_NETS[net]
     ops: list[dict[str, Any]] = []
@@ -96,6 +106,9 @@ def compile_secure(params: dict, net: str, key,
                   "b": share(b, nk(), ring),
                   "sign_threshold": (share(sign_threshold, nk(), ring)
                                      if sign_threshold is not None else None)}
+            if use_kernel_dot:
+                op["wlimbs"] = [_weight_limbs_for(wr, l.kind, j)
+                                for j, wr in enumerate(op["w"])]
             ops.append(op)
         elif l.kind == "act":
             ops.append({"op": "sign" if l.act == "sign" else "relu"})
@@ -111,12 +124,32 @@ def compile_secure(params: dict, net: str, key,
         elif l.kind == "flatten":
             ops.append({"op": "flatten"})
         i += 1
-    return SecureModel(ops=ops, ring=ring, net=net)
+    return SecureModel(ops=ops, ring=ring, net=net,
+                       use_kernel=use_kernel_dot)
+
+
+def _weight_limbs_for(w: RSS, kind: str, part_idx: int):
+    """Setup-time limb cache for one weight-share stack (or None when the
+    layer half can't use the matmul kernel, i.e. the depthwise conv)."""
+    if kind == "fc":
+        return precompute_weight_limbs(w.shares)
+    if kind == "conv" or (kind == "sepconv" and part_idx == 1):
+        kh, kw, cin_g, cout = (int(d) for d in w.shape)
+        return precompute_weight_limbs(
+            w.shares.reshape(3, kh * kw * cin_g, cout))
+    return None  # depthwise half of a sepconv
 
 
 def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
                  reveal_output: bool = True):
-    """Run one secure inference. x_shares: RSS of (B,H,W,C) or (B,D)."""
+    """Run one secure inference. x_shares: RSS of (B,H,W,C) or (B,D).
+
+    Defaults to the fused one-round protocol variants (matmul_truncate for
+    linear+trunc, multiply-open + local Alg-4 inside MSB extraction) —
+    DESIGN.md §8; `set_fused_rounds(False)` restores the paper-faithful
+    round structure.  Models compiled with use_kernel_dot=True route every
+    non-depthwise linear through the fused 3-party Pallas kernel with the
+    cached weight limbs."""
     ring = model.ring
     h = x_shares
     prev_sign = False  # is the current activation ±1-integer valued?
@@ -126,29 +159,56 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
         kind = op["op"]
         if kind in ("conv", "sepconv", "fc"):
             # product scale: input(±1 int: 0 | fixed: f) + W(f) => f or 2f
-            if kind == "fc":
-                z = matmul(h, op["w"][0], parties, tag=f"l{idx}.fc")
-                at_2f = not prev_sign
-            elif kind == "conv":
-                z = conv2d(h, op["w"][0], parties, stride=op["stride"],
-                           padding=op["pad"], tag=f"l{idx}.conv")
-                at_2f = not prev_sign
-            else:  # separable: depthwise then pointwise (Alg 2 twice, Fig 3)
+            wlimbs = op.get("wlimbs") or [None] * len(op["w"])
+            if kind == "sepconv":
+                # separable: depthwise then pointwise (Alg 2 twice, Fig 3);
+                # the depthwise half stays on the einsum path
                 cin = int(h.shape[-1])
-                z = conv2d(h, op["w"][0], parties, stride=op["stride"],
+                h = conv2d(h, op["w"][0], parties, stride=op["stride"],
                            padding=op["pad"], groups=cin,
                            tag=f"l{idx}.dwconv")
                 if not prev_sign:
-                    z = truncate(z, parties, tag=f"l{idx}.dwtrunc")
-                z = conv2d(z, op["w"][1], parties, tag=f"l{idx}.pwconv")
+                    h = truncate(h, parties, tag=f"l{idx}.dwtrunc")
                 at_2f = True
-            bias = op["b"].shares.reshape((3,) + (1,) * (z.ndim - 1) + (-1,))
-            if at_2f:
+                lin, w_rss, wl = "pw", op["w"][1], wlimbs[1]
+            else:
+                at_2f = not prev_sign
+                lin, w_rss, wl = kind, op["w"][0], wlimbs[0]
+            bias = op["b"].shares.reshape((3,) + (1,) * (h.ndim - 1) + (-1,))
+            if at_2f and fused_rounds():
+                # beyond-paper default: product + bias + Π_trunc in the one
+                # reshare round (matmul_truncate / conv2d_truncate)
                 bias = bias * jnp.asarray(ring.scale, ring.dtype)
-            z = RSS(z.shares + bias, ring)
-            if at_2f:
-                z = truncate(z, parties, tag=f"l{idx}.trunc")
-            h = z
+                if lin == "fc":
+                    h = matmul_truncate(h, w_rss, parties, tag=f"l{idx}.fc",
+                                        w_limbs=wl, bias_parts=bias)
+                elif lin == "conv":
+                    h = conv2d_truncate(h, w_rss, parties,
+                                        stride=op["stride"],
+                                        padding=op["pad"],
+                                        tag=f"l{idx}.conv", w_limbs=wl,
+                                        bias_parts=bias)
+                else:
+                    h = conv2d_truncate(h, w_rss, parties,
+                                        tag=f"l{idx}.pwconv", w_limbs=wl,
+                                        bias_parts=bias)
+            else:
+                if lin == "fc":
+                    z = matmul(h, w_rss, parties, tag=f"l{idx}.fc",
+                               w_limbs=wl)
+                elif lin == "conv":
+                    z = conv2d(h, w_rss, parties, stride=op["stride"],
+                               padding=op["pad"], tag=f"l{idx}.conv",
+                               w_limbs=wl)
+                else:
+                    z = conv2d(h, w_rss, parties, tag=f"l{idx}.pwconv",
+                               w_limbs=wl)
+                if at_2f:
+                    bias = bias * jnp.asarray(ring.scale, ring.dtype)
+                z = RSS(z.shares + bias, ring)
+                if at_2f:
+                    z = truncate(z, parties, tag=f"l{idx}.trunc")
+                h = z
             prev_sign = False
             pending_sign_threshold = op.get("sign_threshold")
         elif kind == "sign":
@@ -157,8 +217,14 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
                 h = RSS(h.shares + t.shares.reshape(
                     (3,) + (1,) * (h.ndim - 1) + (-1,)), ring)
                 pending_sign_threshold = None
-            msb = msb_extract(h, parties, tag=f"sign{idx}.msb")
-            bits = sign_from_msb(msb, parties, ring, tag=f"sign{idx}")
+            if fused_rounds():
+                # 1 online round: multiply-open + local Alg-4 (activation.py)
+                _, msb_a = msb_extract_arith(h, parties,
+                                             tag=f"sign{idx}.msb")
+                bits = sign_from_msb_arith(msb_a)
+            else:
+                msb = msb_extract(h, parties, tag=f"sign{idx}.msb")
+                bits = sign_from_msb(msb, parties, ring, tag=f"sign{idx}")
             # keep {0,1} if maxpool follows (fused path); else lift to ±1
             nxt = model.ops[idx + 1]["op"] if idx + 1 < len(model.ops) else None
             if nxt == "maxpool":
@@ -168,13 +234,21 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
                     jnp.asarray(-1, ring.signed_dtype).astype(ring.dtype))
             prev_sign = True
         elif kind == "relu":
-            msb = msb_extract(h, parties, tag=f"relu{idx}.msb")
-            h = relu_from_msb(h, msb, parties, tag=f"relu{idx}")
+            if fused_rounds():
+                _, msb_a = msb_extract_arith(h, parties,
+                                             tag=f"relu{idx}.msb")
+                h = relu_from_msb_arith(h, msb_a, parties, tag=f"relu{idx}")
+            else:
+                msb = msb_extract(h, parties, tag=f"relu{idx}.msb")
+                h = relu_from_msb(h, msb, parties, tag=f"relu{idx}")
             prev_sign = False
         elif kind == "affine":
-            from .linear import mul
-            h = truncate(mul(h, op["scale"], parties, tag=f"aff{idx}"),
-                         parties, tag=f"aff{idx}.tr")
+            from .linear import mul, mul_truncate
+            if fused_rounds():
+                h = mul_truncate(h, op["scale"], parties, tag=f"aff{idx}")
+            else:
+                h = truncate(mul(h, op["scale"], parties, tag=f"aff{idx}"),
+                             parties, tag=f"aff{idx}.tr")
             h = h + op["shift"]
             prev_sign = False
         elif kind == "maxpool":

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ring_matmul import N_LIMBS, balanced_limbs
+from .limbs import N_LIMBS, balanced_limbs
 
 
 def _bin_matmul_kernel(a_ref, w_ref, o_ref):
@@ -36,17 +36,25 @@ def _bin_matmul_kernel(a_ref, w_ref, o_ref):
     o_ref[...] = o_ref[...] + acc
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def binary_weight_matmul(a: jax.Array, w: jax.Array, *, bm: int = 128,
                          bn: int = 128, bk: int = 128,
-                         interpret: bool = True) -> jax.Array:
-    """C = A @ W mod 2^32 with int8 weights.  a: (M,K) uint32, w: (K,N) int8."""
+                         interpret: bool = True,
+                         a_limbs: jax.Array | None = None) -> jax.Array:
+    """C = A @ W mod 2^32 with int8 weights.  a: (M,K) uint32, w: (K,N) int8.
+
+    ``a_limbs`` may carry the activation's pre-decomposed (4, M, K) limbs."""
+    return _binary_weight_matmul_jit(a, w, a_limbs, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _binary_weight_matmul_jit(a, w, a_limbs, *, bm, bn, bk, interpret):
     m, k = a.shape
     k2, n = w.shape
     assert k == k2
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    al = balanced_limbs(a)
+    al = balanced_limbs(a) if a_limbs is None else a_limbs
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
         _bin_matmul_kernel,

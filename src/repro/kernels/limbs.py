@@ -1,0 +1,59 @@
+"""Shared limb decomposition for the mod-2^32 Pallas kernels (DESIGN.md §3).
+
+The TPU MXU has no native mod-2^32 matmul but does int8×int8→int32.  Every
+ring kernel in this package therefore works on *balanced* signed 8-bit limbs
+(digits ∈ [−128, 127], carry-corrected, exact mod 2^32):
+
+    x ≡ Σ_p limb_p · 2^{8p}   (mod 2^32),   limb_p ∈ int8.
+
+This module is the single owner of that decomposition so that callers can
+(a) decompose a whole share *stack* once and reuse the limbs across all the
+per-party dots of an RSS matmul, and (b) cache weight limbs across queries
+(core/secure_model.py).  ``decomposition_count`` exposes a trace-time call
+counter so tests can verify the shared-limb path really decomposes each
+slab once (ISSUE 2 acceptance: 2 calls/layer cached vs 12 naive per-dot).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["N_LIMBS", "balanced_limbs", "count_decompositions"]
+
+N_LIMBS = 4
+
+_COUNTER_STACK: list[list] = []
+
+
+@contextlib.contextmanager
+def count_decompositions():
+    """Yields a one-element list; [0] = #balanced_limbs calls inside.
+
+    Counts *python-level* calls (i.e. traces).  Run under
+    ``jax.disable_jit()`` to count every executed decomposition."""
+    box = [0]
+    _COUNTER_STACK.append(box)
+    try:
+        yield box
+    finally:
+        _COUNTER_STACK.pop()
+
+
+def balanced_limbs(x: jax.Array) -> jax.Array:
+    """uint32 (...) -> int8 (4, ...) with x ≡ Σ limb_p · 2^{8p} (mod 2^32).
+
+    Balanced digits keep every limb product inside int8×int8→int32 range
+    for contraction depths up to 2^15 without intermediate widening."""
+    for box in _COUNTER_STACK:
+        box[0] += 1
+    limbs = []
+    cur = x.astype(jnp.uint32)
+    for _ in range(N_LIMBS):
+        lo = (cur & jnp.uint32(0xFF)).astype(jnp.int32)
+        carry = (lo >= 128).astype(jnp.uint32)
+        lo = lo - 256 * (lo >= 128).astype(jnp.int32)
+        limbs.append(lo.astype(jnp.int8))
+        cur = (cur >> 8) + carry
+    return jnp.stack(limbs)

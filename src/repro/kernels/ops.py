@@ -13,6 +13,7 @@ from . import ref
 from .binary_matmul import binary_binary_matmul, binary_weight_matmul
 from .flash_attention import flash_attention
 from .ring_matmul import ring_matmul
+from .rss_matmul import WeightLimbs, precompute_weight_limbs, rss_matmul_parts
 
 _MIN_TILE = 128
 
@@ -75,8 +76,24 @@ def flash_attention_op(q, k, v, *, bq: int = 128, bk: int = 128):
 
 def rss_matmul_dot(a: jax.Array, b: jax.Array) -> jax.Array:
     """Drop-in `dot` for core.linear.matmul — routes RSS linear layers
-    through the limb-decomposed MXU kernel (folds leading batch dims)."""
+    through the limb-decomposed MXU kernel (folds leading batch dims).
+
+    NOTE: this is the legacy per-dot path (6 kernel launches, 12 limb
+    decompositions per secure matmul).  The fused path below does the whole
+    3-party product in one launch with cached weight limbs."""
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
     out = ring_matmul_op(a2, b)
     return out.reshape(lead + (b.shape[-1],))
+
+
+def rss_matmul_parts_op(x_stack: jax.Array,
+                        weights: WeightLimbs) -> jax.Array:
+    """Full 3-party additive-product stack from one fused kernel launch.
+
+    x_stack: (3, ..., K) uint32 share stack (leading dims folded into M);
+    returns (3, ..., N) with z_i = x_i·(w_i+w_{i+1}) + x_{i+1}·w_i."""
+    lead = x_stack.shape[1:-1]
+    x2 = x_stack.reshape(3, -1, x_stack.shape[-1])
+    out = rss_matmul_parts(x2, weights)
+    return out.reshape((3,) + lead + (weights.n,))

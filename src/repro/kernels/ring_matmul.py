@@ -21,20 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-N_LIMBS = 4
-
-
-def balanced_limbs(x: jax.Array) -> jax.Array:
-    """uint32 (...) -> int8 (4, ...) with x ≡ Σ limb_p · 2^{8p} (mod 2^32)."""
-    limbs = []
-    cur = x.astype(jnp.uint32)
-    for _ in range(N_LIMBS):
-        lo = (cur & jnp.uint32(0xFF)).astype(jnp.int32)
-        carry = (lo >= 128).astype(jnp.uint32)
-        lo = lo - 256 * (lo >= 128).astype(jnp.int32)
-        limbs.append(lo.astype(jnp.int8))
-        cur = (cur >> 8) + carry
-    return jnp.stack(limbs)
+from .limbs import N_LIMBS, balanced_limbs  # shared decomposition (re-export)
 
 
 def _ring_matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
@@ -55,10 +42,23 @@ def _ring_matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
     o_ref[...] = o_ref[...] + acc
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def ring_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
-                bk: int = 128, interpret: bool = True) -> jax.Array:
-    """C = A @ B mod 2^32.  a: (M, K) uint32, b: (K, N) uint32."""
+                bk: int = 128, interpret: bool = True,
+                a_limbs: jax.Array | None = None,
+                b_limbs: jax.Array | None = None) -> jax.Array:
+    """C = A @ B mod 2^32.  a: (M, K) uint32, b: (K, N) uint32.
+
+    ``a_limbs``/``b_limbs`` may carry pre-decomposed (4, M, K)/(4, K, N)
+    int8 limbs (e.g. cached weight limbs) — decomposition is then skipped
+    for that operand."""
+    return _ring_matmul_jit(a, b, a_limbs, b_limbs, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
+
+
+def ring_matmul_impl(a, b, a_limbs=None, b_limbs=None, *, bm=128, bn=128,
+                     bk=128, interpret=True):
+    """Unjitted kernel body — used by tests that count limb decompositions
+    at trace time (a jit cache would hide repeated decompositions)."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -66,8 +66,8 @@ def ring_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
         f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bk},{bn})"
 
-    al = balanced_limbs(a)          # (4, M, K) int8
-    bl = balanced_limbs(b)          # (4, K, N) int8
+    al = balanced_limbs(a) if a_limbs is None else a_limbs  # (4, M, K) int8
+    bl = balanced_limbs(b) if b_limbs is None else b_limbs  # (4, K, N) int8
     grid = (m // bm, n // bn, k // bk)
 
     return pl.pallas_call(
@@ -81,3 +81,7 @@ def ring_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
         interpret=interpret,
     )(al, bl)
+
+
+_ring_matmul_jit = jax.jit(ring_matmul_impl,
+                           static_argnames=("bm", "bn", "bk", "interpret"))

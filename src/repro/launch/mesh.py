@@ -19,16 +19,25 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+# jax.sharding.AxisType only exists on newer jax; older versions default to
+# Auto axes, so omitting the kwarg is behavior-identical there.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _mesh_kwargs(n_axes: int) -> dict:
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 @dataclasses.dataclass(frozen=True)

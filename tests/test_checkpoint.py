@@ -94,9 +94,13 @@ def test_elastic_restore_changed_structure_rejected(tmp_path):
 
 def test_training_loss_decreases(tmp_path):
     cfg = _tiny_cfg()
+    # default warmup (100 steps) leaves lr at a few % of base over a 12-step
+    # run — loss motion would be noise; warm up within the run instead
+    from repro.optim.adamw import OptConfig
     t = Trainer(cfg, TrainerConfig(steps=12, global_batch=4, seq_len=32,
                                    ckpt_dir=str(tmp_path / "l"),
-                                   ckpt_every=100, log_every=100))
+                                   ckpt_every=100, log_every=100),
+                opt_cfg=OptConfig(warmup_steps=3))
     _, _, metrics = t.run(resume=False)
     first3 = np.mean([m["loss"] for m in metrics[:3]])
     last3 = np.mean([m["loss"] for m in metrics[-3:]])

@@ -127,9 +127,17 @@ def test_relu_teacher_net_secure():
 def test_comm_cost_accounting_mnistnet1():
     """Regression-pin the per-query communication (paper Table 1 shape).
 
-    MnistNet1 Sign act protocol = 10 ring elements online per activation:
+    Fused default: Sign = ONE multiply-open round, 6 ring elements online
+    per activation (the Alg-4 conversion is local from [β]^A + public β').
+    Paper-faithful (set_fused_rounds(False)): 10 elements —
       msb.mul reshare 3 + msb.reveal 3 + Alg4 OT 3 + Alg4 fwd 1.
     """
+    from repro.core.linear import set_fused_rounds
+
+    def sign_bytes(led):
+        return sum(b for t, (r, b) in led.by_tag.items()
+                   if t.startswith("sign") and not t.startswith("pre:"))
+
     params = _random_net_params("MnistNet1")
     model = compile_secure(params, "MnistNet1", jax.random.PRNGKey(0), RING32)
     led = secure_infer_cost(model, (1, 28, 28, 1))
@@ -137,7 +145,15 @@ def test_comm_cost_accounting_mnistnet1():
     per_party = led.megabytes / 3
     assert 0.002 < per_party < 0.02, f"{per_party} MB"
     assert led.rounds < 60
-    # online Sign bytes: acts = 128 + 128 = 256, 10 els × 4 B
-    sign_bytes = sum(b for t, (r, b) in led.by_tag.items()
-                     if t.startswith("sign") and not t.startswith("pre:"))
-    assert sign_bytes == 256 * 10 * 4, sign_bytes
+    # online Sign bytes: acts = 128 + 128 = 256, 6 els × 4 B (fused default)
+    assert sign_bytes(led) == 256 * 6 * 4, sign_bytes(led)
+
+    try:
+        set_fused_rounds(False)
+        led_paper = secure_infer_cost(model, (1, 28, 28, 1))
+    finally:
+        set_fused_rounds(True)
+    assert sign_bytes(led_paper) == 256 * 10 * 4, sign_bytes(led_paper)
+    # the fused default strictly dominates: fewer rounds AND fewer bytes
+    assert led.rounds < led_paper.rounds
+    assert led.nbytes <= led_paper.nbytes
