@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -22,14 +23,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: table1,table2,table3,"
-                         "kernels,secure_lm,roofline")
+                         "kernels,secure,secure_lm,roofline")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write {name: us_per_call} JSON to PATH")
     args = ap.parse_args()
     want = set(filter(None, args.only.split(",")))
 
+    if "secure" in want and "jax" not in sys.modules:
+        # the mesh-backend rows need >= 3 host devices; the flag only works
+        # before jax initializes
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count=8")
+
     from . import (kd_curves, kernel_bench, paper_tables, roofline_report,
-                   secure_lm)
+                   secure_e2e, secure_lm)
 
     suites = {
         "table1": paper_tables.table1,
@@ -37,6 +44,7 @@ def main() -> None:
         "table3": paper_tables.table3,
         "kd": kd_curves.kd_curves,
         "kernels": kernel_bench.kernels,
+        "secure": secure_e2e.secure_e2e,
         "secure_lm": secure_lm.secure_lm,
         "roofline": roofline_report.rows,
     }

@@ -1,0 +1,73 @@
+"""End-to-end secure-inference throughput: net × transport backend × batch.
+
+Rows land in BENCH_secure_e2e.json via
+
+    PYTHONPATH=src python -m benchmarks.run --only secure \
+        --json BENCH_secure_e2e.json
+
+Each row times the full CBNN protocol stack (compile-once cached-limb
+models, fused rounds) through ``secure_infer``: the ``local`` backend is
+the stacked single-program simulation, the ``mesh`` backend runs one party
+per device over the size-3 party mesh axis (skipped with a stderr note
+when fewer than 3 devices are visible — benchmarks/run.py raises the fake
+host device count when the secure suite is requested)."""
+from __future__ import annotations
+
+import sys
+import time
+
+# (net, batch) cells; kept CI-sized — interpret-mode Pallas on CPU.
+CELLS = [("MnistNet1", 8), ("MnistNet1", 32), ("MnistNet3", 4)]
+QUERIES = 3
+
+
+def _rows_for(net: str, batch: int, backend: str):
+    import jax
+    import numpy as np
+    from repro.core import RING32, share
+    from repro.core.randomness import Parties
+    from repro.core.secure_model import compile_secure, secure_infer_cost
+    from repro.launch.serve_secure import make_runner
+    from repro.nn import bnn
+    from repro.nn.bnn import INPUT_SHAPES
+
+    shape = INPUT_SHAPES[net]
+    params = bnn.init_bnn(jax.random.PRNGKey(0), net)
+    model = compile_secure(params, net, jax.random.PRNGKey(1), RING32,
+                           use_kernel_dot=True)
+    run, _ = make_runner(model, backend, batch)
+
+    rng = np.random.default_rng(0)
+    x = (rng.integers(0, 2, (batch,) + shape).astype(np.float32) - 0.5)
+    xs = share(x, jax.random.PRNGKey(3), RING32)
+    keys = Parties.setup(jax.random.PRNGKey(7)).keys
+
+    np.asarray(run(keys, xs.shares))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(QUERIES):
+        out = run(keys, xs.shares)
+    np.asarray(out)
+    us = (time.perf_counter() - t0) / QUERIES * 1e6
+
+    led = secure_infer_cost(model, (batch,) + shape)
+    ips = batch / (us / 1e6)
+    return [(f"secure.{net}.{backend}.b{batch}", us,
+             f"{ips:.1f} img/s; {led.megabytes:.3f} MB/query; "
+             f"{led.rounds} rounds")]
+
+
+def secure_e2e():
+    import jax
+
+    rows = []
+    backends = ["local"]
+    if len(jax.devices()) >= 3:
+        backends.append("mesh")
+    else:
+        print("secure: <3 devices, skipping mesh backend rows "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+              file=sys.stderr)
+    for net, batch in CELLS:
+        for backend in backends:
+            rows.extend(_rows_for(net, batch, backend))
+    return rows

@@ -1,7 +1,10 @@
 """CBNN core: 3-party RSS protocols for secure BNN / transformer inference."""
 from .ring import RingSpec, RING32, RING64, default_ring
-from .rss import RSS, BinRSS, share, reconstruct, share_bits, reconstruct_bits
+from .rss import (RSS, BinRSS, share, reconstruct, share_bits,
+                  reconstruct_bits, public_rss)
 from .randomness import Parties
+from .transport import (LocalTransport, MeshTransport, use_transport,
+                        current as current_transport)
 from .ot import ot3
 from .linear import (reveal, mul, square, matmul, conv2d, truncate,
                      linear_layer, set_matmul_mode)

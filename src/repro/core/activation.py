@@ -12,9 +12,11 @@ protocol cost is paid for the {0,1}→{−1,+1} lift.
 """
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 
-from . import comm
+from . import comm, transport
 from .linear import _reshare, fused_rounds, mul
 from .msb import msb_extract, msb_extract_arith, DEFAULT_BOUND_BITS
 from .ot import ot3
@@ -38,20 +40,25 @@ def sign_from_msb(msb: BinRSS, parties: Parties, ring: RingSpec,
     x1 = β1 (P0&P1... slot x1 is held by P0 and P1), x2 = β2 (P1&P2) —
     a valid RSS with zero extra reshare.
     """
-    b0, b1, b2 = msb.shares[0], msb.shares[1], msb.shares[2]
-    shape = b0.shape
+    t = transport.current()
+    shape = msb.shape
     beta1 = parties.common_pair(0, 1, shape, ring)  # key k1: P0 & P1
     beta2 = parties.common_pair(1, 2, shape, ring)  # key k2: P1 & P2
 
+    b1 = t.slot_view(msb.shares, 1)  # sender P1's own pair
+    b2 = t.slot_view(msb.shares, 2)
     base = (jnp.asarray(1, jnp.uint8) ^ b1 ^ b2).astype(ring.dtype)
     m0 = (base - beta1 - beta2).astype(ring.dtype)
     m1 = (((jnp.asarray(1, jnp.uint8) ^ b1 ^ b2) ^ jnp.asarray(1, jnp.uint8))
           .astype(ring.dtype) - beta1 - beta2).astype(ring.dtype)
-    mc = ot3(m0, m1, b0, sender=1, receiver=0, helper=2,
+    mc = ot3(m0, m1, msb.shares, 0, sender=1, receiver=0, helper=2,
              parties=parties, ring=ring, tag=tag + ".ot")
     # P0 -> P2: m_c (1 round, 1 element)
-    comm.record(tag + ".fwd", rounds=1, nbytes=int(mc.size) * ring.nbytes)
-    return RSS(jnp.stack([mc, beta1, beta2]), ring)
+    n = math.prod(int(d) for d in shape)
+    comm.record(tag + ".fwd", rounds=1, nbytes=n * ring.nbytes)
+    mc_fwd = t.send(mc, 0, 2)
+    slot0 = t.merge_recv(mc, mc_fwd, holder=2)
+    return RSS(t.build_rss([slot0, beta1, beta2]), ring)
 
 
 def sign_from_msb_arith(msb_a: RSS) -> RSS:
@@ -95,11 +102,12 @@ def _bit_times_value_ot(msb: BinRSS, value, *, sender: int, receiver: int,
     ``value`` is a tensor known to `sender`.  Returns the three additive
     share slabs (receiver_share, sender_mask1, sender_mask2) in role order.
     """
+    t = transport.current()
     s_view = [(sender + k) % PARTIES for k in (0, 1)]
     # sender knows its two MSB share slots; receiver+helper know the third.
     other = 3 - sum(s_view) if set(s_view) != {0, 2} else 1
-    bs = msb.shares[s_view[0]] ^ msb.shares[s_view[1]]
-    choice = msb.shares[other]
+    bs = t.slot_view(msb.shares, s_view[0]) ^ t.slot_view(msb.shares,
+                                                          s_view[1])
     shape = bs.shape
 
     mask_a = parties.private_to(sender, shape, ring)
@@ -111,8 +119,8 @@ def _bit_times_value_ot(msb: BinRSS, value, *, sender: int, receiver: int,
     sel1 = sel0 ^ jnp.asarray(1, ring.dtype)
     m0 = (sel0 * value - mask_a - mask_b).astype(ring.dtype)
     m1 = (sel1 * value - mask_a - mask_b).astype(ring.dtype)
-    mc = ot3(m0, m1, choice, sender=sender, receiver=receiver, helper=helper,
-             parties=parties, ring=ring, tag=tag)
+    mc = ot3(m0, m1, msb.shares, other, sender=sender, receiver=receiver,
+             helper=helper, parties=parties, ring=ring, tag=tag)
     return mc, mask_a, mask_b
 
 
@@ -125,18 +133,20 @@ def relu_from_msb(x: RSS, msb: BinRSS, parties: Parties,
     The two run in the same 2 network rounds; one reshare returns to RSS.
     """
     ring = x.ring
+    t = transport.current()
     with comm.round_barrier(tag + ".ots", rounds=2):
         # OT-A: P1 knows (x1, x2) and MSB shares (MSB_1, MSB_2); choice MSB_0.
         a_recv, a_m1, a_m2 = _bit_times_value_ot(
-            msb, x.shares[1] + x.shares[2], sender=1, receiver=0, helper=2,
+            msb, t.slot_view(x.shares, 1) + t.slot_view(x.shares, 2),
+            sender=1, receiver=0, helper=2,
             parties=parties, ring=ring, complement=True, tag=tag + ".otA")
         # OT-B: P0 knows x0 and (MSB_0, MSB_1); choice MSB_2.
         b_recv, b_m0, b_m1 = _bit_times_value_ot(
-            msb, x.shares[0], sender=0, receiver=2, helper=1,
+            msb, t.slot_view(x.shares, 0), sender=0, receiver=2, helper=1,
             parties=parties, ring=ring, complement=True, tag=tag + ".otB")
     # additive recombination per party:
     #   P0: a_recv + b_m0 ; P1: a_m1 + b_m1 ; P2: a_m2 + b_recv
-    z = jnp.stack([a_recv + b_m0, a_m1 + b_m1, a_m2 + b_recv])
+    z = t.build_parts([a_recv + b_m0, a_m1 + b_m1, a_m2 + b_recv])
     return _reshare(z, ring, parties, tag + ".reshare")
 
 

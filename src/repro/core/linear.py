@@ -18,10 +18,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from . import comm
+from . import comm, transport
 from .randomness import Parties
 from .ring import RingSpec
-from .rss import RSS, PARTIES
+from .rss import RSS
 
 __all__ = ["reveal", "mul", "matmul", "conv2d", "truncate",
            "truncate_probabilistic", "linear_layer", "square",
@@ -60,7 +60,7 @@ def fused_rounds() -> bool:
 def reveal(x: RSS, tag: str = "reveal", decode: bool = False):
     """Open x to all parties: P_i sends x_i to P_{i-1}; 1 round, 3 elements."""
     comm.record(tag, rounds=1, nbytes=3 * _numel(x) * x.ring.nbytes)
-    total = x.shares[0] + x.shares[1] + x.shares[2]
+    total = transport.current().open_rss(x.shares)
     return x.ring.decode(total) if decode else total
 
 
@@ -76,16 +76,17 @@ def _numel(x: RSS) -> int:
 
 
 def _reshare(z_parts, ring: RingSpec, parties: Parties, tag: str) -> RSS:
-    """z_parts: (3, *shape) additive shares z_i computed by each P_i.
+    """z_parts: additive-parts stack of shares z_i computed by each P_i.
     Adds the 3-of-3 zero mask and performs the reshare round
-    (P_i -> P_{i-1}), after which P_i holds (z_i, z_{i+1})."""
+    (P_i -> P_{i-1}), after which P_i holds (z_i, z_{i+1}).  Under
+    MeshTransport the round is a real ppermute (transport.complete)."""
     a = parties.zero_shares(z_parts.shape[1:], ring)
     z = z_parts + a
     n = 1
     for d in z.shape[1:]:
         n *= int(d)
     comm.record(tag, rounds=1, nbytes=3 * n * ring.nbytes)
-    return RSS(z, ring)
+    return RSS(transport.current().complete(z), ring)
 
 
 def _align_party_axis(xs, ys):
@@ -100,10 +101,12 @@ def _align_party_axis(xs, ys):
 
 def _mul_parts(xs, ys):
     """Elementwise additive product stack z_i, honoring the matmul mode."""
-    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
+    t = transport.current()
+    xo, yo = t.own_view(xs), t.own_view(ys)
+    xn, yn = t.next_view(xs), t.next_view(ys)
     if _MATMUL_MODE == "opt2":
-        return xs * (ys + yn) + xn * ys
-    return xs * ys + xn * ys + xs * yn
+        return xo * (yo + yn) + xn * yo
+    return xo * yo + xn * yo + xo * yn
 
 
 def mul(x: RSS, y: RSS, parties: Parties, tag: str = "mul") -> RSS:
@@ -115,10 +118,13 @@ def mul(x: RSS, y: RSS, parties: Parties, tag: str = "mul") -> RSS:
 
 def square(x: RSS, parties: Parties, tag: str = "square") -> RSS:
     """x^2 with one fewer local product: z_i = x_i^2 + 2·x_i·x_{i+1}."""
-    xs = x.shares
-    xn = jnp.roll(xs, -1, axis=0)
-    z = xs * xs + jnp.asarray(2, x.ring.dtype) * xs * xn
-    return _reshare(z, x.ring, parties, tag)
+    return _reshare(_square_parts(x), x.ring, parties, tag)
+
+
+def _square_parts(x: RSS):
+    t = transport.current()
+    xo, xn = t.own_view(x.shares), t.next_view(x.shares)
+    return xo * xo + jnp.asarray(2, x.ring.dtype) * xo * xn
 
 
 def _ring_dot(a, b, ring: RingSpec):
@@ -129,25 +135,28 @@ def _ring_dot(a, b, ring: RingSpec):
 
 
 def _matmul_parts(x: RSS, w: RSS | None, dot, w_limbs) -> jax.Array:
-    """Additive product stack z_i (3, ..., N) — local compute, no comm.
+    """Additive product stack z_i (parts layout) — local compute, no comm.
 
     With ``w_limbs`` (a kernels.rss_matmul.WeightLimbs cached at model
     setup) the whole 3-party product runs in ONE fused Pallas launch:
     activations are limb-decomposed once per share slab, weight limbs
     (including the fused operand w_i + w_{i+1}) come precomputed."""
+    t = transport.current()
     if w_limbs is not None:
         from ..kernels.ops import rss_matmul_parts_op
-        return rss_matmul_parts_op(x.shares, w_limbs)
+        return rss_matmul_parts_op(t.own_view(x.shares),
+                                   t.next_view(x.shares), w_limbs)
     dot = dot or (lambda a, b: _ring_dot(a, b, x.ring))
-    xs, ws = x.shares, w.shares
-    xn, wn = jnp.roll(xs, -1, axis=0), jnp.roll(ws, -1, axis=0)
+    xo, wo = t.own_view(x.shares), t.own_view(w.shares)
+    xn, wn = t.next_view(x.shares), t.next_view(w.shares)
+    slots = xo.shape[0]
     if _MATMUL_MODE == "opt2":
         # z_i = x_i @ (w_i + w_{i+1}) + x_{i+1} @ w_i      (2 matmuls/party)
-        return jnp.stack([dot(xs[i], ws[i] + wn[i]) + dot(xn[i], ws[i])
-                          for i in range(PARTIES)])
+        return jnp.stack([dot(xo[i], wo[i] + wn[i]) + dot(xn[i], wo[i])
+                          for i in range(slots)])
     # Algorithm 2 verbatim                                  (3 matmuls/party)
-    return jnp.stack([dot(xs[i], ws[i]) + dot(xn[i], ws[i])
-                      + dot(xs[i], wn[i]) for i in range(PARTIES)])
+    return jnp.stack([dot(xo[i], wo[i]) + dot(xn[i], wo[i])
+                      + dot(xo[i], wn[i]) for i in range(slots)])
 
 
 def matmul(x: RSS, w: RSS | None, parties: Parties, tag: str = "matmul",
@@ -182,7 +191,7 @@ def mul_open(x: RSS, y: RSS, parties: Parties, tag: str = "mul_open"):
         n *= int(d)
     # each party broadcasts z_i to both peers: 6 messages, one round
     comm.record(tag, rounds=1, nbytes=6 * n * x.ring.nbytes)
-    return z[0] + z[1] + z[2]
+    return transport.current().open_parts(z)
 
 
 def matmul_truncate(x: RSS, w: RSS | None, parties: Parties,
@@ -230,15 +239,16 @@ def _trunc_decode(c, ring: RingSpec, f: int):
 def _open_shift(z, parties: Parties, ring: RingSpec, f: int, tag: str) -> RSS:
     """Shared tail of the fused ops: mask additive parts with the bounded
     trunc pair, broadcast, open, arithmetic-shift.  One round, 6 elements."""
+    t = transport.current()
     z = z + parties.zero_shares(z.shape[1:], ring)
     r, rp = _trunc_pair(z.shape[1:], parties, ring, f)
     offset = jnp.asarray(1 << (ring.bits - 2), ring.dtype)
-    c_parts = z - r.shares
+    c_parts = z - t.own_view(r.shares)
     n = 1
     for d in z.shape[1:]:
         n *= int(d)
     comm.record(tag, rounds=1, nbytes=6 * n * ring.nbytes)
-    c = c_parts[0] + c_parts[1] + c_parts[2] + offset
+    c = t.open_parts(c_parts) + offset
     return rp.add_public(_trunc_decode(c, ring, f))
 
 
@@ -255,9 +265,7 @@ def mul_truncate(x: RSS, y: RSS, parties: Parties, frac: int | None = None,
 def square_truncate(x: RSS, parties: Parties, frac: int | None = None,
                     tag: str = "sq_tr") -> RSS:
     ring = x.ring
-    xs = x.shares
-    xn = jnp.roll(xs, -1, axis=0)
-    z = xs * xs + jnp.asarray(2, ring.dtype) * xs * xn
+    z = _square_parts(x)
     return _open_shift(z, parties, ring, ring.frac if frac is None else frac,
                        tag)
 
@@ -307,21 +315,24 @@ def conv2d(x: RSS, w: RSS, parties: Parties, stride: int = 1,
     cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)  # (...,kh*kw*Cin)
     cols4 = cols.reshape(b, ho, wo, kh * kw, cin)
     # einsum over the patch dim per channel: out[...,c*mult+m]
-    xs = cols4.shares
-    ws = w.reshape(kh * kw, 1, cout).shares.reshape(PARTIES, kh * kw, cin, mult)
-    xn, wn = jnp.roll(xs, -1, axis=0), jnp.roll(ws, -1, axis=0)
+    t = transport.current()
+    slots = t.rss_slots
+    ws_full = w.reshape(kh * kw, 1, cout).shares.reshape(slots, kh * kw,
+                                                         cin, mult)
+    xo, xn = t.own_view(cols4.shares), t.next_view(cols4.shares)
+    wo_, wn = t.own_view(ws_full), t.next_view(ws_full)
 
     def dw(a, bmat):
         return jnp.einsum("bhwkc,kcm->bhwcm", a, bmat,
                           preferred_element_type=x.ring.dtype)
-    z = jnp.stack([dw(xs[i], ws[i] + wn[i]) + dw(xn[i], ws[i])
-                   for i in range(PARTIES)])
-    z = z.reshape(PARTIES, b, ho, wo, cout)
+    z = jnp.stack([dw(xo[i], wo_[i] + wn[i]) + dw(xn[i], wo_[i])
+                   for i in range(xo.shape[0])])
+    z = z.reshape(z.shape[0], b, ho, wo, cout)
     return _reshare(z, x.ring, parties, tag=tag)
 
 
 def _im2col_rss(x: RSS, kh, kw, stride, padding):
-    p = PARTIES
+    p = x.shares.shape[0]
     b, h, w, c = (int(d) for d in x.shape)
     cols, ho, wo = _im2col(x.shares.reshape(p * b, h, w, c),
                            kh, kw, stride, padding)
@@ -386,11 +397,14 @@ def truncate_probabilistic(x: RSS, parties: Parties, frac: int | None = None,
     ring = x.ring
     f = ring.frac if frac is None else frac
     shape = x.shape
-    r = parties.rand_rss(shape, ring)
-    r_plain = r.shares[0] + r.shares[1] + r.shares[2]
+    t = transport.current()
+    r, r_plain = parties.rand_rss_open(shape, ring)
     r_shift = ring.to_signed(r_plain) >> f
     zero = parties.zero_shares(shape, ring)
-    rp = RSS(zero.at[0].add(r_shift.astype(ring.dtype)), ring)
+    rp_parts = zero + (r_shift.astype(ring.dtype)
+                       * t.party_mask_parts(0, len(shape), ring.dtype))
+    # the preprocessing reshare that turns the additive [r >> f] into RSS
+    rp = RSS(t.complete(rp_parts), ring)
     comm.record(tag, rounds=1, nbytes=3 * _numel(x) * ring.nbytes,
                 preprocess=True)
     masked = reveal(x - r, tag=tag)
@@ -409,18 +423,19 @@ def linear_layer(x: RSS, w: RSS | None, b: RSS | None, parties: Parties,
 
     With fused rounds on (the default) the truncation's masked opening
     rides the matmul's reshare round — 1 online round instead of 2."""
+    t = transport.current()
     if truncate_out and _FUSED_ROUNDS:
         bias_parts = None
         if b is not None:
             # product carries scale 2^{2f}; lift the (scale-f) bias to match
-            bias_parts = (b.shares.reshape(
-                (PARTIES,) + (1,) * (x.ndim - 1) + (-1,))
+            bias_parts = (t.own_view(b.shares).reshape(
+                (t.parts_slots,) + (1,) * (x.ndim - 1) + (-1,))
                 << jnp.asarray(x.ring.frac, x.ring.dtype))
         return matmul_truncate(x, w, parties, tag=tag, dot=dot,
                                w_limbs=w_limbs, bias_parts=bias_parts)
     z = matmul(x, w, parties, tag=tag, dot=dot, w_limbs=w_limbs)
     if b is not None:
-        bsh = b.shares.reshape((PARTIES,) + (1,) * (z.ndim - 1) + (-1,))
+        bsh = b.shares.reshape((t.rss_slots,) + (1,) * (z.ndim - 1) + (-1,))
         if truncate_out:
             # product carries scale 2^{2f}; lift the (scale-f) bias to match
             bsh = bsh << jnp.asarray(z.ring.frac, z.ring.dtype)

@@ -23,14 +23,16 @@ of minimal communication vs SecureNN/Falcon's compare-based extraction.
 """
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 
-from . import comm
+from . import comm, transport
 from .linear import mul, mul_open, reveal, fused_rounds
 from .ot import ot3
 from .randomness import Parties
 from .ring import RingSpec
-from .rss import RSS, BinRSS, PARTIES
+from .rss import RSS, BinRSS, PARTIES, public_rss
 
 __all__ = ["b2a", "msb_extract", "msb_extract_arith", "a2b_msb",
            "DEFAULT_BOUND_BITS"]
@@ -50,24 +52,27 @@ def b2a(bit: BinRSS, parties: Parties, ring: RingSpec,
     P0/P2 input choice bit β0.  P0 learns m_{β0} = β - α1 - α2.
     Additive shares (m_c, α1, α2) are then re-shared into RSS.
     """
-    b0, b1, b2 = bit.shares[0], bit.shares[1], bit.shares[2]
-    shape = b0.shape
+    t = transport.current()
+    shape = bit.shape
 
     alpha1 = parties.private_to(1, shape, ring)
     alpha2 = parties.common_pair(1, 2, shape, ring)  # key k2: P1 & P2
 
-    bxor12 = (b1 ^ b2).astype(ring.dtype)
+    # b1 ^ b2 is P1's own pair (it holds slots 1 and 2)
+    bxor12 = (t.slot_view(bit.shares, 1)
+              ^ t.slot_view(bit.shares, 2)).astype(ring.dtype)
     m0 = (bxor12 - alpha1 - alpha2).astype(ring.dtype)
     m1 = ((bxor12 ^ jnp.asarray(1, ring.dtype)) - alpha1 - alpha2).astype(ring.dtype)
-    mc = ot3(m0, m1, b0, sender=1, receiver=0, helper=2, parties=parties,
-             ring=ring, tag=tag + ".ot", preprocess=preprocess)
+    mc = ot3(m0, m1, bit.shares, 0, sender=1, receiver=0, helper=2,
+             parties=parties, ring=ring, tag=tag + ".ot",
+             preprocess=preprocess)
 
     # additive 3-of-3: P0: mc, P1: α1, P2: α2 → reshare to RSS (1 round)
-    z = jnp.stack([mc, alpha1, alpha2])
-    n = int(mc.size)
+    z = t.build_parts([mc, alpha1, alpha2])
+    n = math.prod(int(d) for d in shape)
     comm.record(tag + ".reshare", rounds=1, nbytes=3 * n * ring.nbytes,
                 preprocess=preprocess)
-    return RSS(z, ring)
+    return RSS(t.complete(z), ring)
 
 
 def _msb_core(x: RSS, parties: Parties, bound_bits: int, tag: str):
@@ -86,9 +91,8 @@ def _msb_core(x: RSS, parties: Parties, bound_bits: int, tag: str):
         r = parties.rand_rss(shape, ring, max_bits=r_bits)  # bounded positive
         r = r.mul_public_int(2).add_public(jnp.asarray(1, ring.dtype))  # odd
         # ρ = (-1)^β · r = (1 - 2β) · r : one offline secure mult.
-        one_minus_2b = RSS((jnp.zeros_like(beta_a.shares)
-                            .at[0].set(jnp.asarray(1, ring.dtype)))
-                           - beta_a.shares * jnp.asarray(2, ring.dtype), ring)
+        one_minus_2b = (public_rss(jnp.asarray(1, ring.dtype), shape, ring)
+                        - beta_a.mul_public_int(jnp.asarray(2, ring.dtype)))
         rho = mul(one_minus_2b, r, parties, tag=tag + ".rho")
 
     # ---- online ---------------------------------------------------------

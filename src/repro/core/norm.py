@@ -20,7 +20,7 @@ from .linear import (mul, mul_truncate, square, square_truncate, truncate,
                      fused_rounds)
 from .randomness import Parties
 from .ring import RingSpec
-from .rss import RSS, PARTIES
+from .rss import RSS, PARTIES, public_rss
 
 
 def _mul_tr(a: RSS, b: RSS, parties, tag: str, frac: int | None = None):
@@ -85,12 +85,11 @@ def newton_reciprocal(d: RSS, parties: Parties, iters: int = 14,
     constant 2^-10 converges for d up to 2^10 (quadratic once in range).
     """
     ring = d.ring
-    y = RSS(parties.zero_shares(d.shape, ring)
-            .at[0].add(ring.encode(jnp.float32(init))), ring)
+    y = public_rss(ring.encode(jnp.float32(init)), d.shape, ring)
     two = ring.encode(jnp.float32(2.0))
     for k in range(iters):
         dy = _mul_tr(d, y, parties, f"{tag}.mul{k}")
-        corr = RSS((jnp.zeros_like(dy.shares).at[0].add(two)) - dy.shares, ring)
+        corr = public_rss(two, d.shape, ring) - dy
         y = _mul_tr(y, corr, parties, f"{tag}.mul{k}b")
     return y
 
@@ -104,14 +103,12 @@ def newton_rsqrt(d: RSS, parties: Parties, iters: int = 14,
     polish (fixed-point RMSNorm operands land in (0.05, 8) by construction).
     """
     ring = d.ring
-    y = RSS(parties.zero_shares(d.shape, ring)
-            .at[0].add(ring.encode(jnp.float32(init))), ring)
+    y = public_rss(ring.encode(jnp.float32(init)), d.shape, ring)
     three = ring.encode(jnp.float32(3.0))
     for k in range(iters):
         y2 = _sq_tr(y, parties, f"{tag}.sq{k}")
         dy2 = _mul_tr(d, y2, parties, f"{tag}.mul{k}")
-        corr = RSS((jnp.zeros_like(dy2.shares).at[0].add(three)) - dy2.shares,
-                   ring)
+        corr = public_rss(three, d.shape, ring) - dy2
         y = _mul_tr(y, corr, parties, f"{tag}.mul{k}b",
                     frac=ring.frac + 1)  # ×1/2 fused into the shift
     return y

@@ -9,12 +9,21 @@ unmasks.  2 sequential rounds, 3 ring elements of traffic per slot.
 Vectorized over arbitrary tensor shapes: one protocol invocation transfers a
 whole tensor of message pairs with a tensor of choice bits in the same 2
 rounds (all slots in parallel).
+
+All movement goes through the active transport: under ``LocalTransport``
+the two sends are identities on globally-visible tensors (the historical
+simulation); under ``MeshTransport`` they are real single-pair ppermutes
+between the named parties.  The choice bit is passed as (share stack, slot
+index) rather than a raw tensor so each backend can produce the view the
+receiver/helper actually hold — the choice slot of a 3-party OT is exactly
+the share the sender is missing, so its RSS holding set is {receiver,
+helper}.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from . import comm
+from . import comm, transport
 from .randomness import Parties
 from .ring import RingSpec, default_ring
 
@@ -30,19 +39,31 @@ def pair_key_index(a: int, b: int) -> int:
     raise ValueError(f"no common key for pair ({a},{b})")
 
 
-def ot3(m0, m1, c, *, sender: int, receiver: int, helper: int,
-        parties: Parties, ring: RingSpec | None = None, tag: str = "ot3",
+def ot3(m0, m1, choice_shares, choice_slot: int | None = None, *,
+        sender: int, receiver: int, helper: int, parties: Parties,
+        ring: RingSpec | None = None, tag: str = "ot3",
         preprocess: bool = False):
     """Run the 3-party OT on tensors of message pairs.
 
-    m0, m1: ring tensors held by `sender`.
-    c:      {0,1} uint8 tensor known to both `receiver` and `helper`.
+    m0, m1:        ring tensors held by `sender`.
+    choice_shares: a binary share stack; ``choice_shares[choice_slot]`` is
+                   the {0,1} choice bit, known to `receiver` and `helper`
+                   (it is the share slot the sender does not hold).  With
+                   ``choice_slot=None`` it is the plain bit tensor itself —
+                   a globally-visible value, so LocalTransport only.
     Returns m_c (as the receiver's private tensor).
     """
     ring = ring or default_ring()
+    t = transport.current()
     m0 = jnp.asarray(m0, ring.dtype)
     m1 = jnp.asarray(m1, ring.dtype)
-    cb = jnp.asarray(c, jnp.uint8)
+    if choice_slot is None:
+        assert not t.carries_pair, \
+            "a plain choice tensor has no party locality; pass a share " \
+            "stack + slot under a per-party transport"
+        cb = jnp.asarray(choice_shares, jnp.uint8)
+    else:
+        cb = jnp.asarray(t.slot_view(choice_shares, choice_slot), jnp.uint8)
 
     # Step 1: sender & receiver derive common masks from their shared PRF key.
     kidx = pair_key_index(sender, receiver)
@@ -52,10 +73,10 @@ def ot3(m0, m1, c, *, sender: int, receiver: int, helper: int,
     mask1 = _prf_bits(parties.keys[kidx], cnt + 100003, m1.shape, ring)
 
     # Step 2-3: sender masks and sends (s0, s1) to helper.
-    s0 = m0 ^ mask0
-    s1 = m1 ^ mask1
+    s0 = t.send(m0 ^ mask0, sender, helper)
+    s1 = t.send(m1 ^ mask1, sender, helper)
     # Step 4: helper forwards s_c to receiver (helper knows c, not the masks).
-    sc = jnp.where(cb.astype(bool), s1, s0)
+    sc = t.send(jnp.where(cb.astype(bool), s1, s0), helper, receiver)
     # Step 5: receiver unmasks (receiver knows c and the masks).
     mc = sc ^ jnp.where(cb.astype(bool), mask1, mask0)
 

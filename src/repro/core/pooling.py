@@ -37,7 +37,8 @@ def _window_split(x: RSS, pool: int):
     """(B, H, W, C) -> list of pool*pool RSS slices aligned per window."""
     b, h, w, c = (int(d) for d in x.shape)
     assert h % pool == 0 and w % pool == 0
-    sh = x.shares.reshape(PARTIES, b, h // pool, pool, w // pool, pool, c)
+    slots = x.shares.shape[0]
+    sh = x.shares.reshape(slots, b, h // pool, pool, w // pool, pool, c)
     return [RSS(sh[:, :, :, i, :, j, :], x.ring)
             for i in range(pool) for j in range(pool)]
 

@@ -17,6 +17,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from . import transport
 from .ring import RingSpec, default_ring
 from .rss import RSS, BinRSS, PARTIES
 
@@ -55,13 +56,14 @@ class Parties:
 
     # -- 3-out-of-3: additive sharing of zero ----------------------------
     def zero_shares(self, shape, ring: RingSpec | None = None) -> jax.Array:
-        """(3, *shape) with Σ_i a_i = 0 mod 2^l; a_i from P_i's own keys."""
+        """Additive-parts stack with Σ_i a_i = 0 mod 2^l; a_i = F(k_{i+1})
+        − F(k_i) is computable from P_i's own two keys."""
         ring = ring or default_ring()
         cnt = self._next()
-        f = jnp.stack([_prf_bits(self.keys[i], cnt, shape, ring)
-                       for i in range(PARTIES)])
-        # a_i = F(k_{i+1}) - F(k_i)
-        return jnp.roll(f, -1, axis=0) - f
+        t = transport.current()
+        f, fn = t.prf_parts_pair(
+            self.keys, lambda k: _prf_bits(k, cnt, shape, ring))
+        return fn - f
 
     # -- 2-out-of-3: RSS of a fresh random value --------------------------
     def rand_rss(self, shape, ring: RingSpec | None = None,
@@ -75,21 +77,36 @@ class Parties:
         """
         ring = ring or default_ring()
         cnt = self._next()
-        f = jnp.stack([_prf_bits(self.keys[i], cnt, shape, ring)
-                       for i in range(PARTIES)])
-        if max_bits is not None:
-            per_share = max(max_bits - 2, 1)
-            f = f & ring.wrap((1 << per_share) - 1)
-        return RSS(f, ring)
+
+        def draw(k):
+            f = _prf_bits(k, cnt, shape, ring)
+            if max_bits is not None:
+                per_share = max(max_bits - 2, 1)
+                f = f & ring.wrap((1 << per_share) - 1)
+            return f
+
+        return RSS(transport.current().prf_rss(self.keys, draw), ring)
+
+    def rand_rss_open(self, shape, ring: RingSpec | None = None):
+        """(RSS of random a, plaintext a).  Simulation shortcut for
+        baselines that need the opened mask (truncate_probabilistic): every
+        backend computes all three PRF streams from the replicated keys."""
+        ring = ring or default_ring()
+        cnt = self._next()
+        fs = [_prf_bits(self.keys[i], cnt, shape, ring)
+              for i in range(PARTIES)]
+        r = RSS(transport.current().build_rss(fs), ring)
+        return r, fs[0] + fs[1] + fs[2]
 
     def rand_bits(self, shape) -> BinRSS:
         """2-of-3 XOR sharing of a fresh random bit tensor."""
         cnt = self._next()
-        f = jnp.stack([
-            jax.random.bits(jax.random.fold_in(self.keys[i], cnt), shape,
-                            jnp.uint8) & 1
-            for i in range(PARTIES)])
-        return BinRSS(f)
+
+        def draw(k):
+            return jax.random.bits(jax.random.fold_in(k, cnt), shape,
+                                   jnp.uint8) & 1
+
+        return BinRSS(transport.current().prf_rss(self.keys, draw))
 
     # -- pairwise common randomness ---------------------------------------
     def common_pair(self, a: int, b: int, shape, ring: RingSpec | None = None):

@@ -10,6 +10,13 @@ messages) so the protocol logic stays faithful to the 3-party deployment.
 
 Binary sharing ``[y]^B`` (XOR sharing of bits, mod 2) is the same structure
 with XOR in place of + and dtype uint8 in {0, 1}.
+
+All party-axis handling goes through the active :mod:`transport` backend:
+under ``LocalTransport`` the leading axis has size 3 (one slot per additive
+share, the historical semantics); under ``MeshTransport`` the same code runs
+per party inside ``shard_map`` and the leading axis is the local pair
+``[x_i, x_{i+1}]``.  RSS arithmetic is slot-wise, so it is layout-agnostic;
+only party-conditional ops (``add_public``) ask the transport for a mask.
 """
 from __future__ import annotations
 
@@ -19,10 +26,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import transport
 from .ring import RingSpec, default_ring
 
 __all__ = ["RSS", "BinRSS", "share", "reconstruct", "share_bits",
-           "reconstruct_bits", "zeros_like_shares"]
+           "reconstruct_bits", "zeros_like_shares", "public_rss"]
 
 PARTIES = 3
 
@@ -80,8 +88,10 @@ class RSS:
     def add_public(self, c):
         """x + c for public c (encoded): one party adds, others keep shares."""
         c = _as_ring(c, self.ring)
-        sh = self.shares.at[0].add(jnp.broadcast_to(c, self.shares.shape[1:]))
-        return RSS(sh, self.ring)
+        t = transport.current()
+        mask = t.party_mask_rss(0, self.ndim, self.dtype)
+        cb = jnp.broadcast_to(c, self.shares.shape[1:])
+        return RSS(self.shares + cb * mask, self.ring)
 
     def mul_public_int(self, c):
         """x * c for a public *integer* c (no truncation needed)."""
@@ -89,7 +99,8 @@ class RSS:
         return RSS(self.shares * c, self.ring)
 
     def reshape(self, *shape):
-        return RSS(self.shares.reshape((PARTIES,) + tuple(shape)), self.ring)
+        slots = self.shares.shape[0]
+        return RSS(self.shares.reshape((slots,) + tuple(shape)), self.ring)
 
     def transpose(self, axes):
         axes = (0,) + tuple(a + 1 for a in axes)
@@ -132,7 +143,10 @@ class BinRSS:
             return BinRSS(self.shares ^ other.shares)
         # public bit: party 0 flips
         b = jnp.asarray(other, jnp.uint8)
-        return BinRSS(self.shares.at[0].set(self.shares[0] ^ b))
+        t = transport.current()
+        mask = t.party_mask_rss(0, self.shares.ndim - 1, jnp.uint8)
+        return BinRSS(self.shares ^ (jnp.broadcast_to(b, self.shares.shape[1:])
+                                     * mask))
 
     def not_(self):
         return self ^ jnp.uint8(1)
@@ -189,3 +203,15 @@ def reconstruct_bits(x: BinRSS):
 
 def zeros_like_shares(x: RSS) -> RSS:
     return RSS(jnp.zeros_like(x.shares), x.ring)
+
+
+def public_rss(c, shape, ring: RingSpec | None = None) -> RSS:
+    """Deterministic RSS of a *public* value: x_0 = c, x_1 = x_2 = 0.
+
+    Valid without communication (every party can derive its pair from the
+    public c), unlike randomized sharings which would need a reshare."""
+    ring = ring or default_ring()
+    c = _as_ring(c, ring)
+    t = transport.current()
+    mask = t.party_mask_rss(0, len(shape), ring.dtype)
+    return RSS(jnp.broadcast_to(c, tuple(shape)) * mask, ring)

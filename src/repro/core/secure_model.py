@@ -25,7 +25,7 @@ import numpy as np
 
 from ..kernels.rss_matmul import precompute_weight_limbs
 from ..nn.bnn import ALL_NETS, INPUT_SHAPES, L
-from . import comm
+from . import comm, transport
 from .activation import (relu_from_msb, relu_from_msb_arith, sign_from_msb,
                          sign_from_msb_arith)
 from .linear import (conv2d, conv2d_truncate, fused_rounds, linear_layer,
@@ -174,10 +174,13 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
             else:
                 at_2f = not prev_sign
                 lin, w_rss, wl = kind, op["w"][0], wlimbs[0]
-            bias = op["b"].shares.reshape((3,) + (1,) * (h.ndim - 1) + (-1,))
+            tp = transport.current()
             if at_2f and fused_rounds():
                 # beyond-paper default: product + bias + Π_trunc in the one
-                # reshare round (matmul_truncate / conv2d_truncate)
+                # reshare round (matmul_truncate / conv2d_truncate) — the
+                # bias rides the additive parts, so only the own share
+                bias = tp.own_view(op["b"].shares).reshape(
+                    (tp.parts_slots,) + (1,) * (h.ndim - 1) + (-1,))
                 bias = bias * jnp.asarray(ring.scale, ring.dtype)
                 if lin == "fc":
                     h = matmul_truncate(h, w_rss, parties, tag=f"l{idx}.fc",
@@ -203,6 +206,9 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
                 else:
                     z = conv2d(h, w_rss, parties, tag=f"l{idx}.pwconv",
                                w_limbs=wl)
+                # z is a full RSS here, so the bias is added share-wise
+                bias = op["b"].shares.reshape(
+                    (z.shares.shape[0],) + (1,) * (z.ndim - 1) + (-1,))
                 if at_2f:
                     bias = bias * jnp.asarray(ring.scale, ring.dtype)
                 z = RSS(z.shares + bias, ring)
@@ -215,7 +221,7 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
             if pending_sign_threshold is not None:
                 t = pending_sign_threshold
                 h = RSS(h.shares + t.shares.reshape(
-                    (3,) + (1,) * (h.ndim - 1) + (-1,)), ring)
+                    (h.shares.shape[0],) + (1,) * (h.ndim - 1) + (-1,)), ring)
                 pending_sign_threshold = None
             if fused_rounds():
                 # 1 online round: multiply-open + local Alg-4 (activation.py)
@@ -283,3 +289,111 @@ def secure_infer_cost(model: SecureModel, input_shape,
         return secure_infer(model, RSS(xs, model.ring), parties)
 
     return comm.estimate_cost(run, x)
+
+
+# ---------------------------------------------------------------------------
+# Mesh backend: one real per-party program over a size-3 "party" mesh axis
+# ---------------------------------------------------------------------------
+
+def _split_arrays(tree):
+    """Partition a pytree into its jax-array leaves (party-stacked tensors)
+    and a rebuild closure for the remaining static structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    is_arr = [isinstance(l, (jax.Array, np.ndarray)) for l in leaves]
+    arrays = tuple(l for l, a in zip(leaves, is_arr) if a)
+
+    def rebuild(new_arrays):
+        it = iter(new_arrays)
+        new_leaves = [next(it) if a else l for l, a in zip(leaves, is_arr)]
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    return arrays, rebuild
+
+
+def make_secure_infer_mesh(model: SecureModel, mesh, *,
+                           party_axis: str = "party",
+                           batch_axis: str | None = None,
+                           reveal_output: bool = True):
+    """Build a jit-able mesh-backend runner for ``secure_infer``.
+
+    Returns ``fn(keys, x_stack) -> (3, B, classes)`` where ``x_stack`` is
+    the global (3, B, ...) share stack.  Inside, each device of the size-3
+    ``party_axis`` runs ONE party's program under :class:`MeshTransport`:
+    share stacks travel as the replicated pair ``[x_i, x_{i+1}]``, reshares
+    are ``ppermute``, openings are ``all_gather`` (DESIGN.md §2).  The
+    model's share/limb tensors enter pre-paired (the dealer hands each
+    party both components of its pair, like input sharing — unmetered), so
+    the only collectives in the compiled per-party HLO are the ones the
+    CommLedger records.
+
+    ``batch_axis`` optionally shards the query batch over a second mesh
+    axis — the §6 data axis composing with the party axis.  On a
+    party-only mesh the run is strictly bit-identical to LocalTransport
+    (identical shapes ⇒ identical PRF streams); with a sharded batch the
+    per-shard PRF draws differ from the full-batch sim, so the exact
+    truncation's ±ulp noise may differ (values still agree to a few ulp;
+    Sign decisions are unaffected outside ulp-sized margins)."""
+    from jax.sharding import PartitionSpec as P
+
+    assert mesh.shape[party_axis] == 3, \
+        f"mesh axis {party_axis!r} must have size 3"
+    arrays, rebuild = _split_arrays(model.ops)
+    for a in arrays:
+        assert int(a.shape[0]) == 3, f"expected party-stacked array: {a.shape}"
+
+    x_spec = P(party_axis, batch_axis)
+    w_spec = P(party_axis)
+    n_arr = len(arrays)
+    in_specs = (P(), x_spec, x_spec, (w_spec,) * n_arr, (w_spec,) * n_arr)
+    out_specs = P(party_axis, batch_axis)
+    cnt0 = 0
+
+    def inner(keys, x_own, x_nxt, arrs_own, arrs_nxt):
+        t = transport.MeshTransport(party_axis)
+        with transport.use_transport(t):
+            prt = Parties(keys, cnt0)
+            ops = rebuild([t.ingest(o, n) for o, n in zip(arrs_own,
+                                                          arrs_nxt)])
+            m = SecureModel(ops=ops, ring=model.ring, net=model.net,
+                            use_kernel=model.use_kernel)
+            x = RSS(t.ingest(x_own, x_nxt), model.ring)
+            out = secure_infer(m, x, prt, reveal_output=reveal_output)
+            if reveal_output:
+                return out[None]      # replicated opening, stacked per party
+            return t.own_view(out.shares)
+
+    sm = transport.shard_map_compat(inner, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    **transport.SHARD_MAP_CHECK_KW)
+
+    def roll(a):
+        return jnp.roll(a, -1, axis=0)
+
+    arrs_nxt = tuple(roll(a) for a in arrays)
+
+    def fn(keys, x_stack):
+        return sm(keys, x_stack, roll(x_stack), arrays, arrs_nxt)
+
+    return fn
+
+
+def secure_infer_mesh(model: SecureModel, x_shares: RSS, parties: Parties,
+                      mesh, *, party_axis: str = "party",
+                      batch_axis: str | None = None,
+                      reveal_output: bool = True, jit: bool = True):
+    """Run one secure inference with each party as a real per-device
+    program (MeshTransport backend).  Bit-identical to the LocalTransport
+    path on a party-only mesh — tests/test_transport_mesh.py pins this
+    (see make_secure_infer_mesh for the sharded-batch ulp caveat).
+
+    Returns the revealed output of party 0 (all parties' openings are
+    identical) or, with ``reveal_output=False``, the output RSS."""
+    fn = make_secure_infer_mesh(model, mesh, party_axis=party_axis,
+                                batch_axis=batch_axis,
+                                reveal_output=reveal_output)
+    if jit:
+        fn = jax.jit(fn)
+    out = fn(parties.keys, x_shares.shares)
+    if reveal_output:
+        return out[0]
+    return RSS(out, model.ring)

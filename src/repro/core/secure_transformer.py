@@ -137,17 +137,19 @@ def _bmm(a: RSS, b: RSS, parties: Parties, tag: str,
          fuse_trunc: bool = False) -> RSS:
     """Batched secure matmul over a leading head axis: (h,S,K)x(h,K,T);
     optionally with the one-round fused truncation."""
+    from . import transport
     from .linear import _reshare, truncate as _trunc
     ring = a.ring
-    xs, ys = a.shares, b.shares
-    xn, yn = jnp.roll(xs, -1, axis=0), jnp.roll(ys, -1, axis=0)
+    t = transport.current()
+    xs, ys = t.own_view(a.shares), t.own_view(b.shares)
+    xn, yn = t.next_view(a.shares), t.next_view(b.shares)
 
     def dot(p, q):
         return jnp.einsum("hsk,hkt->hst", p, q,
                           preferred_element_type=ring.dtype)
 
     z = jnp.stack([dot(xs[i], ys[i] + yn[i]) + dot(xn[i], ys[i])
-                   for i in range(3)])
+                   for i in range(xs.shape[0])])
     if not fuse_trunc:
         return _reshare(z, ring, parties, tag)
     if not fused_rounds():
@@ -158,12 +160,12 @@ def _bmm(a: RSS, b: RSS, parties: Parties, tag: str,
     r = parties.rand_rss(z.shape[1:], ring, max_bits=ring.bits - 1)
     rp = RSS(r.shares >> ring.frac, ring)
     offset = jnp.asarray(1 << (ring.bits - 2), ring.dtype)
-    c_parts = z - r.shares
+    c_parts = z - t.own_view(r.shares)
     n = 1
     for dd in z.shape[1:]:
         n *= int(dd)
     comm.record(tag + ".fused", rounds=1, nbytes=6 * n * ring.nbytes)
-    c = c_parts[0] + c_parts[1] + c_parts[2] + offset
+    c = t.open_parts(c_parts) + offset
     c_shift = (ring.to_signed(c) >> ring.frac).astype(ring.dtype)
     public = c_shift - jnp.asarray(1 << (ring.bits - 2 - ring.frac),
                                    ring.dtype) + jnp.asarray(1, ring.dtype)

@@ -90,5 +90,4 @@ def secure_argmax_onehot(x: RSS, parties: Parties,
     # MSB==1 ⇔ argmax position; sign_from_msb returns 1⊕MSB so negate: use
     # arithmetic shares of MSB itself = 1 - (1⊕MSB).
     not_m = sign_from_msb(msb, parties, x.ring, tag=tag + ".b2a")
-    one = jnp.zeros_like(not_m.shares).at[0].add(jnp.asarray(1, x.ring.dtype))
-    return RSS(one - not_m.shares, x.ring)
+    return (-not_m).add_public(jnp.asarray(1, x.ring.dtype))

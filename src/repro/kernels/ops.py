@@ -87,13 +87,26 @@ def rss_matmul_dot(a: jax.Array, b: jax.Array) -> jax.Array:
     return out.reshape(lead + (b.shape[-1],))
 
 
-def rss_matmul_parts_op(x_stack: jax.Array,
+def rss_matmul_parts_op(x_stack: jax.Array, x_next_stack: jax.Array,
                         weights: WeightLimbs) -> jax.Array:
     """Full 3-party additive-product stack from one fused kernel launch.
 
-    x_stack: (3, ..., K) uint32 share stack (leading dims folded into M);
-    returns (3, ..., N) with z_i = x_i·(w_i+w_{i+1}) + x_{i+1}·w_i."""
+    x_stack / x_next_stack: (S, ..., K) uint32 share stacks in additive
+    alignment (S = 3 stacked sim / 1 per-party; leading dims folded into
+    M); ``weights`` arrays are RSS-layout stacks that may carry the
+    per-party pair — only the own slot feeds the kernel.
+    Returns (S, ..., N) with z_i = x_i·(w_i+w_{i+1}) + x_{i+1}·w_i."""
+    from ..core import transport
+    t = transport.current()
+    s = x_stack.shape[0]
     lead = x_stack.shape[1:-1]
-    x2 = x_stack.reshape(3, -1, x_stack.shape[-1])
-    out = rss_matmul_parts(x2, weights)
-    return out.reshape((3,) + lead + (weights.n,))
+    x2 = x_stack.reshape(s, -1, x_stack.shape[-1])
+    if not t.carries_pair:
+        # stacked sim: next == roll(own); the kernel derives the neighbour
+        # limbs by rolling the shared limb tensor (no extra decomposition)
+        w_own, xn2 = weights, None
+    else:
+        w_own = WeightLimbs(*(t.own_view(a) for a in weights))
+        xn2 = x_next_stack.reshape(s, -1, x_next_stack.shape[-1])
+    out = rss_matmul_parts(x2, w_own, x_next_stack=xn2)
+    return out.reshape((s,) + lead + (weights.n,))

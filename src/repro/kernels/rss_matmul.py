@@ -132,19 +132,20 @@ def _rss_matmul_kernel(x_ref, xn_ref, wf_ref, w_ref, o_ref):
 
 @functools.partial(jax.jit,
                    static_argnames=("bm", "bn", "bk", "interpret"))
-def _rss_matmul_call(xl, wl, wfl, *, bm, bn, bk, interpret):
-    """xl: (3,4,M,K) int8; wl/wfl: (3,4,K,N) int8 -> (3,M,N) uint32."""
-    _, _, m, k = xl.shape
+def _rss_matmul_call(xl, xnl, wl, wfl, *, bm, bn, bk, interpret):
+    """xl/xnl: (S,4,M,K) int8; wl/wfl: (S,4,K,N) int8 -> (S,M,N) uint32.
+
+    S is the local party count: 3 in the stacked single-program simulation,
+    1 inside a MeshTransport per-party program (each device runs its own
+    slice of the same grid)."""
+    s, _, m, k = xl.shape
     n = wl.shape[3]
     assert wl.shape[2] == k, (xl.shape, wl.shape)
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
         f"({m},{k})x({k},{n}) not divisible by ({bm},{bk},{bn})"
-    # x_{p+1} limbs: party-axis roll of the SAME limb tensor (decomposition
-    # is elementwise, so it commutes with the roll — no second decomposition)
-    xnl = jnp.roll(xl, -1, axis=0)
 
-    grid = (PARTIES, m // bm, n // bn, k // bk)
+    grid = (s, m // bm, n // bn, k // bk)
     return pl.pallas_call(
         _rss_matmul_kernel,
         grid=grid,
@@ -159,47 +160,65 @@ def _rss_matmul_call(xl, wl, wfl, *, bm, bn, bk, interpret):
                          lambda p, i, j, kk: (p, 0, kk, j)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda p, i, j, kk: (p, i, j)),
-        out_shape=jax.ShapeDtypeStruct((PARTIES, m, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((s, m, n), jnp.uint32),
         interpret=interpret,
     )(xl, xnl, wfl, wl)
 
 
-def rss_matmul(x_stack: jax.Array, weights: WeightLimbs, *, bm: int = 128,
+def rss_matmul(x_stack: jax.Array, weights: WeightLimbs, *,
+               x_next_stack: jax.Array | None = None, bm: int = 128,
                bn: int = 128, bk: int = 128,
                interpret: bool = True) -> jax.Array:
-    """All three parties' additive products in one kernel launch.
+    """All parties' additive products in one kernel launch.
 
-    x_stack: (3, M, K) uint32 activation-share stack.
-    Returns (3, M, N) uint32 with z_i = x_i·(w_i+w_{i+1}) + x_{i+1}·w_i.
+    x_stack: (S, M, K) uint32 activation-share stack (S = 3 stacked sim /
+    1 per-party).  ``x_next_stack`` carries x_{i+1} explicitly when the
+    caller holds the replicated pair (MeshTransport); when None it is the
+    party-axis roll of x_stack (stacked simulation).
+    Returns (S, M, N) uint32 with z_i = x_i·(w_i+w_{i+1}) + x_{i+1}·w_i.
     Handles non-tile-aligned M/K/N by zero padding (zero rows/cols
     contribute zero mod 2^32)."""
-    _, m, k = x_stack.shape
+    s, m, k = x_stack.shape
     assert k == weights.k, (x_stack.shape, weights.ws.shape)
-    xp = _pad_axis(_pad_axis(x_stack, _TILE, 1), _TILE, 2)
-    xl = _stack_limbs(xp)
-    out = _rss_matmul_call(xl, weights.wl, weights.wfl, bm=bm, bn=bn, bk=bk,
-                           interpret=interpret)
+    if x_next_stack is None:
+        # x_{p+1} limbs: party-axis roll of the SAME limb tensor
+        # (decomposition is elementwise, so it commutes with the roll —
+        # no second decomposition)
+        xp = _pad_axis(_pad_axis(x_stack, _TILE, 1), _TILE, 2)
+        xl = _stack_limbs(xp)
+        xnl = jnp.roll(xl, -1, axis=0)
+    else:
+        # pair layout: ONE decomposition of the concatenated (own, next)
+        # slabs keeps the one-decomposition-per-slab property
+        both = jnp.concatenate([x_stack, x_next_stack], axis=0)
+        bl = _stack_limbs(_pad_axis(_pad_axis(both, _TILE, 1), _TILE, 2))
+        xl, xnl = bl[:s], bl[s:]
+    out = _rss_matmul_call(xl, xnl, weights.wl, weights.wfl, bm=bm, bn=bn,
+                           bk=bk, interpret=interpret)
     return out[:, :m, :weights.n]
 
 
-def rss_matmul_parts_ref(x_stack: jax.Array,
-                         weights: WeightLimbs) -> jax.Array:
+def rss_matmul_parts_ref(x_stack: jax.Array, weights: WeightLimbs,
+                         x_next_stack: jax.Array | None = None) -> jax.Array:
     """Reference path (exact, same mod-2^32 integers as the kernel):
     per-party uint32 dot_generals on the cached fused operand."""
-    xn = jnp.roll(x_stack, -1, axis=0)
+    xn = (jnp.roll(x_stack, -1, axis=0) if x_next_stack is None
+          else x_next_stack)
 
     def dot(a, b):
         return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
                                    preferred_element_type=jnp.uint32)
     return jnp.stack([dot(x_stack[i], weights.wf[i]) + dot(xn[i], weights.ws[i])
-                      for i in range(PARTIES)])
+                      for i in range(x_stack.shape[0])])
 
 
 def rss_matmul_parts(x_stack: jax.Array, weights: WeightLimbs, *,
+                     x_next_stack: jax.Array | None = None,
                      min_dim: int = 8, interpret: bool = True) -> jax.Array:
     """Kernel dispatch with the small-shape fallback used across kernels/:
     both paths are exact mod 2^32, so results are bit-identical."""
     _, m, k = x_stack.shape
     if min(m, k, weights.n) < min_dim:
-        return rss_matmul_parts_ref(x_stack, weights)
-    return rss_matmul(x_stack, weights, interpret=interpret)
+        return rss_matmul_parts_ref(x_stack, weights, x_next_stack)
+    return rss_matmul(x_stack, weights, x_next_stack=x_next_stack,
+                      interpret=interpret)

@@ -1,0 +1,137 @@
+"""Secure serving launcher: batched secure-BNN inference end to end.
+
+The first end-to-end secure serving path (DESIGN.md §1/§2): the model owner
+compiles once (``compile_secure`` — BN fusing + secret sharing + cached
+weight limbs for the fused 3-party Pallas kernel), then every query batch
+runs the full CBNN protocol stack under either transport backend:
+
+  * ``--backend local`` — stacked single-program simulation
+    (LocalTransport); communication is accounted, not performed.
+  * ``--backend mesh``  — one party per device over a size-3 "party" mesh
+    axis (MeshTransport): reshares are ppermutes, openings are all_gathers,
+    and the query batch is sharded over the remaining devices as a §6
+    "data" axis when the batch divides.
+
+Reports throughput plus the per-query CommLedger and its modeled LAN/WAN
+wall-clock.
+
+  PYTHONPATH=src python -m repro.launch.serve_secure --net MnistNet1 \
+      --backend mesh --batch 32 --queries 4
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def build(net: str, use_kernel: bool):
+    import jax
+    from repro.core import RING32
+    from repro.core.secure_model import compile_secure
+    from repro.nn import bnn
+
+    params = bnn.init_bnn(jax.random.PRNGKey(0), net)
+    model = compile_secure(params, net, jax.random.PRNGKey(1), RING32,
+                           use_kernel_dot=use_kernel)
+    return model
+
+
+def make_runner(model, backend: str, batch: int, party_axis: str = "party"):
+    """Compile-once runner fn(keys, x_stack) -> (B, classes) logits."""
+    import jax
+    import numpy as np
+    from repro.core.rss import RSS
+    from repro.core.secure_model import make_secure_infer_mesh, secure_infer
+    from repro.core.randomness import Parties
+
+    if backend == "local":
+        def run(keys, x_stack):
+            return secure_infer(model, RSS(x_stack, model.ring),
+                                Parties(keys))
+        return jax.jit(run), None
+
+    n_dev = len(jax.devices())
+    if n_dev < 3:
+        raise SystemExit(f"mesh backend needs >= 3 devices, have {n_dev} "
+                         "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    data = max(d for d in range(1, n_dev // 3 + 1) if batch % d == 0)
+    devs = np.asarray(jax.devices()[:3 * data])
+    if data > 1:
+        mesh = jax.sharding.Mesh(devs.reshape(3, data), (party_axis, "data"))
+        fn = make_secure_infer_mesh(model, mesh, batch_axis="data")
+    else:
+        mesh = jax.sharding.Mesh(devs, (party_axis,))
+        fn = make_secure_infer_mesh(model, mesh)
+    jitted = jax.jit(fn)
+    return (lambda keys, x_stack: jitted(keys, x_stack)[0]), mesh
+
+
+def main():
+    # only the CLI mutates the env (importing this module must not); the
+    # flag works only before jax initializes
+    if "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default="MnistNet1")
+    ap.add_argument("--backend", choices=("local", "mesh"), default="local")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=4)
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="skip the fused Pallas kernel (jnp ring dots)")
+    ap.add_argument("--json", default="", metavar="PATH")
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.core import RING32, comm, share
+    from repro.core.randomness import Parties
+    from repro.core.secure_model import secure_infer_cost
+    from repro.nn.bnn import INPUT_SHAPES
+
+    shape = INPUT_SHAPES[args.net]
+    model = build(args.net, not args.no_kernel)
+    run, mesh = make_runner(model, args.backend, args.batch)
+    if mesh is not None:
+        print(f"[serve_secure] mesh axes "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    led = secure_infer_cost(model, (args.batch,) + shape)
+    parties = Parties.setup(jax.random.PRNGKey(7))
+
+    rng = np.random.default_rng(0)
+    x = (rng.integers(0, 2, (args.batch,) + shape).astype(np.float32) - 0.5)
+    xs = share(x, jax.random.PRNGKey(3), RING32)
+
+    out = np.asarray(run(parties.keys, xs.shares))  # compile + warm
+    assert out.shape[0] == args.batch
+
+    t0 = time.time()
+    for q in range(args.queries):
+        out = run(parties.keys, xs.shares)
+    np.asarray(out)
+    dt = time.time() - t0
+    qps = args.queries / dt
+    ips = qps * args.batch
+
+    print(f"[serve_secure] {args.net} backend={args.backend} "
+          f"batch={args.batch} kernel={not args.no_kernel}: "
+          f"{args.queries} queries in {dt:.2f}s = {qps:.2f} q/s "
+          f"({ips:.1f} img/s)")
+    print(f"[serve_secure] per-query comm: {led.megabytes:.3f} MB online "
+          f"({led.rounds} rounds), modeled LAN {led.time(comm.LAN)*1e3:.1f} ms"
+          f" / WAN {led.time(comm.WAN)*1e3:.0f} ms")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"net": args.net, "backend": args.backend,
+                       "batch": args.batch, "img_per_s": ips,
+                       "query_per_s": qps,
+                       "comm_mb_per_query": led.megabytes,
+                       "rounds": led.rounds}, f, indent=2)
+        print(f"[serve_secure] wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -153,6 +153,105 @@ def collective_bytes_from_hlo(hlo_text: str) -> dict:
     return out
 
 
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def party_wire_bytes_from_hlo(hlo_text: str) -> dict:
+    """Physical wire bytes of the collectives in a per-party SPMD program.
+
+    ``collective_bytes_from_hlo`` counts each collective's operand once (the
+    roofline convention: per-chip shard traffic).  For cross-checking the
+    secure-protocol CommLedger against a MeshTransport program we need the
+    *total bytes on the wire across all parties* instead:
+
+      * collective-permute: every listed source→target pair moves one
+        operand — bytes = operand × n_pairs (a full party ring is ×3, a
+        single point-to-point send is ×1; with a composed data axis every
+        data replica's ring is listed, so all rings are summed),
+      * all-gather: each of the D group members broadcasts its shard to
+        the other D−1, per replica group — bytes = operand × D × (D−1) ×
+        n_groups.
+
+    Scaled by while-loop trip counts like the roofline extractor.  With
+    these conventions, for a program whose only collectives are the
+    protocol's, the sum equals the CommLedger's (online + offline) byte
+    total on a party-only mesh, and ledger × data-axis size on a composed
+    party×data mesh (the traced ledger meters one data replica's
+    per-shard protocol; the wire sums every replica's rings/gathers) —
+    pinned by tests/test_transport_mesh.py on both mesh shapes.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    sizes: dict[str, int] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                sizes[m.group(2)] = _type_bytes(m.group(3))
+
+    out = {"collective-permute": {"count": 0, "bytes": 0},
+           "all-gather": {"count": 0, "bytes": 0}}
+
+    def operand_bytes(line, mend):
+        args = line[mend:]
+        depth, end = 1, len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return sum(sizes.get(op_, 0)
+                   for op_ in _OPERAND_RE.findall(args[:end]))
+
+    def visit(comp: str, mult: int, seen: tuple):
+        if comp not in comps or comp in seen:
+            return
+        for line in comps[comp]:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            opcode = m.group(4)
+            if opcode in ("collective-permute", "collective-permute-start"):
+                pm = _PAIRS_RE.search(line)
+                n_pairs = pm.group(1).count("{") if pm else 1
+                out["collective-permute"]["count"] += mult
+                out["collective-permute"]["bytes"] += \
+                    mult * n_pairs * operand_bytes(line, m.end())
+            elif opcode in ("all-gather", "all-gather-start"):
+                gm = _GROUPS_RE.search(line)
+                gi = _GROUPS_IOTA_RE.search(line)
+                if gm:
+                    d = gm.group(1).count(",") + 1
+                    braces = line.split("replica_groups=", 1)[1]
+                    groups = braces[:braces.index("}}") + 2].count("{") - 1
+                elif gi:
+                    groups, d = int(gi.group(1)), int(gi.group(2))
+                else:
+                    groups, d = 1, 1
+                out["all-gather"]["count"] += mult
+                out["all-gather"]["bytes"] += \
+                    mult * groups * d * (d - 1) * operand_bytes(line, m.end())
+            elif opcode == "while":
+                attrs = dict(re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                        line))
+                trip = _while_trip_count(comps.get(attrs.get("condition", ""),
+                                                   []))
+                visit(attrs.get("body", ""), mult * trip, seen + (comp,))
+            elif opcode in ("call", "conditional"):
+                for mm in re.findall(r"(?:to_apply|calls)=%?([\w.\-]+)", line):
+                    visit(mm, mult, seen + (comp,))
+
+    if entry:
+        visit(entry, 1, ())
+    out["total_bytes"] = (out["collective-permute"]["bytes"]
+                          + out["all-gather"]["bytes"])
+    return out
+
+
 def summarize_memory(mem) -> dict:
     get = lambda attr: int(getattr(mem, attr, -1))
     return {
