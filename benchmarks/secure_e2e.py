@@ -1,16 +1,30 @@
-"""End-to-end secure-inference throughput: net × transport backend × batch.
+"""End-to-end secure-inference throughput: net × transport backend × batch
+× deployment mode.
 
 Rows land in BENCH_secure_e2e.json via
 
     PYTHONPATH=src python -m benchmarks.run --only secure \
         --json BENCH_secure_e2e.json
 
-Each row times the full CBNN protocol stack (compile-once cached-limb
+Each timing row runs the full CBNN protocol stack (compile-once cached-limb
 models, fused rounds) through ``secure_infer``: the ``local`` backend is
 the stacked single-program simulation, the ``mesh`` backend runs one party
 per device over the size-3 party mesh axis (skipped with a stderr note
 when fewer than 3 devices are visible — benchmarks/run.py raises the fake
-host device count when the secure suite is requested)."""
+host device count when the secure suite is requested).
+
+Deployment-mode suffixes (DESIGN.md §11):
+
+  (none)   binary-domain engine, shared weights (the default serving path)
+  .arith   binarization-unaware ablation (binary_linear="off": post-Sign
+           layers lifted to scale f and paying the full trunc opening)
+  .wpub    public-weight deployment (weights="public": linear layers are
+           local share algebra — zero wire bytes on post-Sign layers)
+
+``secure.comm.<net>.<mode>.kb`` rows record the per-query ONLINE wire
+kilobytes from the traced CommLedger in the us_per_call column, so the
+bytes trajectory (arith > binary > public) is machine-readable in
+BENCH_secure_e2e.json alongside the timings."""
 from __future__ import annotations
 
 import sys
@@ -18,23 +32,38 @@ import time
 
 # (net, batch) cells; kept CI-sized — interpret-mode Pallas on CPU.
 CELLS = [("MnistNet1", 8), ("MnistNet1", 32), ("MnistNet3", 4)]
+# deployment-mode cells: (net, batch, mode, backends)
+MODE_CELLS = [("MnistNet1", 8, "arith", ("local",)),
+              ("MnistNet1", 8, "wpub", ("local", "mesh")),
+              ("MnistNet3", 4, "wpub", ("local",))]
+COMM_NETS = ["MnistNet1", "MnistNet3"]
 QUERIES = 3
 
+# mode -> (weights, binary_linear) for serve_secure.build, so the bench
+# measures exactly the model the serving launcher builds
+_MODES = {"binary": ("shared", "auto"),
+          "arith": ("shared", "off"),
+          "wpub": ("public", "auto")}
 
-def _rows_for(net: str, batch: int, backend: str):
-    import jax
+
+def _compile(net: str, mode: str, use_kernel: bool = True):
+    from repro.launch.serve_secure import build
+
+    weights, binary_linear = _MODES[mode]
+    return build(net, use_kernel, weights, binary_linear)
+
+
+def _rows_for(net: str, batch: int, backend: str, mode: str = "binary"):
     import numpy as np
+    import jax
     from repro.core import RING32, share
     from repro.core.randomness import Parties
-    from repro.core.secure_model import compile_secure, secure_infer_cost
+    from repro.core.secure_model import secure_infer_cost
     from repro.launch.serve_secure import make_runner
-    from repro.nn import bnn
     from repro.nn.bnn import INPUT_SHAPES
 
     shape = INPUT_SHAPES[net]
-    params = bnn.init_bnn(jax.random.PRNGKey(0), net)
-    model = compile_secure(params, net, jax.random.PRNGKey(1), RING32,
-                           use_kernel_dot=True)
+    model = _compile(net, mode)
     run, _ = make_runner(model, backend, batch)
 
     rng = np.random.default_rng(0)
@@ -51,9 +80,28 @@ def _rows_for(net: str, batch: int, backend: str):
 
     led = secure_infer_cost(model, (batch,) + shape)
     ips = batch / (us / 1e6)
-    return [(f"secure.{net}.{backend}.b{batch}", us,
+    suffix = "" if mode == "binary" else f".{mode}"
+    return [(f"secure.{net}.{backend}.b{batch}{suffix}", us,
              f"{ips:.1f} img/s; {led.megabytes:.3f} MB/query; "
              f"{led.rounds} rounds")]
+
+
+def _comm_rows(net: str):
+    """Per-query online wire KB per deployment mode (batch 1) — the
+    binary-domain byte trajectory, machine-readable in the JSON."""
+    from repro.core.secure_model import secure_infer_cost
+    from repro.nn.bnn import INPUT_SHAPES
+
+    rows = []
+    for mode in ("arith", "binary", "wpub"):
+        # the ledger is trace-only (jax.eval_shape) and kernel-agnostic:
+        # skip the limb-decomposition setup work
+        model = _compile(net, mode, use_kernel=False)
+        led = secure_infer_cost(model, (1,) + INPUT_SHAPES[net])
+        rows.append((f"secure.comm.{net}.{mode}.kb", led.nbytes / 1e3,
+                     f"{led.rounds} online rounds; "
+                     f"{led.pre_nbytes/1e3:.1f} KB offline"))
+    return rows
 
 
 def secure_e2e():
@@ -70,4 +118,10 @@ def secure_e2e():
     for net, batch in CELLS:
         for backend in backends:
             rows.extend(_rows_for(net, batch, backend))
+    for net, batch, mode, wanted in MODE_CELLS:
+        for backend in wanted:
+            if backend in backends:
+                rows.extend(_rows_for(net, batch, backend, mode))
+    for net in COMM_NETS:
+        rows.extend(_comm_rows(net))
     return rows

@@ -7,7 +7,8 @@ from .transport import (LocalTransport, MeshTransport, use_transport,
                         current as current_transport)
 from .ot import ot3
 from .linear import (reveal, mul, square, matmul, conv2d, truncate,
-                     linear_layer, set_matmul_mode)
+                     linear_layer, set_matmul_mode, PublicTensor,
+                     bin_matmul, bin_conv2d)
 from .msb import b2a, msb_extract, a2b_msb, DEFAULT_BOUND_BITS
 from .activation import (secure_sign, secure_relu, sign_from_msb,
                          relu_from_msb, select_from_msb)

@@ -3,12 +3,17 @@
 Both consume the binary shares [MSB(x)]^B produced by Algorithm 3 and use
 the 3-party OT.  The OT constructions land the results *directly in RSS
 layout* (each message/mask is known to exactly the two parties that must
-hold that share slot) — no extra reshare for Sign; one for ReLU.
+hold that share slot) — no extra reshare for Sign; one for ReLU.  All
+inter-party movement (slot views, sends, the reshare) goes through the
+active :mod:`transport` backend (DESIGN.md §1), so the same code runs in
+the stacked simulation and as a real per-party `shard_map` program.
 
 Sign outputs the indicator bit  s = 1 ⊕ MSB(x) ∈ {0,1}  as arithmetic
-shares.  The BNN's ±1 activation is the affine map 2s−1, which downstream
-linear layers fold into their weights/bias locally (see nn/bnn.py), so no
-protocol cost is paid for the {0,1}→{−1,+1} lift.
+shares.  The executor lifts it to the BNN's ±1 activation with the local
+affine 2s−1 (zero protocol cost), and the result travels as ±1 *integers
+at scale 0* — exactly the domain the binary-domain linear engine keys on
+(DESIGN.md §11): the following linear layer pays one reshare round
+(shared weights) or nothing at all (public weights), never a truncation.
 """
 from __future__ import annotations
 
@@ -62,20 +67,21 @@ def sign_from_msb(msb: BinRSS, parties: Parties, ring: RingSpec,
 
 
 def sign_from_msb_arith(msb_a: RSS) -> RSS:
-    """Fused-round Alg 4 (beyond-paper, §Perf): with [MSB]^A already in hand
-    (msb_extract_arith derives it locally from the offline [β]^A and the
-    public β'), the {0,1} Sign indicator is just  1 − [MSB]^A  — ZERO online
-    rounds and zero bytes vs the OT path's 3 rounds / 4 elements."""
+    """Fused-round Alg 4 (beyond-paper, DESIGN.md §8): with [MSB]^A already
+    in hand (msb_extract_arith derives it locally from the offline [β]^A and
+    the public β'), the {0,1} Sign indicator is just  1 − [MSB]^A  — ZERO
+    online rounds and zero bytes vs the OT path's 3 rounds / 4 elements.
+    Its ±1 lift is what the §11 binary-domain linear paths consume."""
     ring = msb_a.ring
     return (-msb_a).add_public(jnp.asarray(1, ring.dtype))
 
 
 def relu_from_msb_arith(x: RSS, msb_a: RSS, parties: Parties,
                         tag: str = "relu") -> RSS:
-    """Fused-round Alg 5 (beyond-paper): ReLU(x) = (1 − [MSB]^A)·x as ONE
-    secure mult round — replaces the two bit×value OTs (2 rounds) + reshare.
-    The gate is a {0,1} integer (scale 0), so the product keeps x's scale
-    and needs no truncation."""
+    """Fused-round Alg 5 (beyond-paper, DESIGN.md §8): ReLU(x) =
+    (1 − [MSB]^A)·x as ONE secure mult round — replaces the two bit×value
+    OTs (2 rounds) + reshare.  The gate is a {0,1} integer (scale 0), so
+    the product keeps x's scale and needs no truncation."""
     gate = sign_from_msb_arith(msb_a)
     return mul(gate, x, parties, tag=tag + ".gate")
 

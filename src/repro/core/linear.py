@@ -10,9 +10,20 @@ Beyond-paper optimization ("fused-operand", §Perf): per party
     z_i = x_i·(y_i + y_{i+1}) + x_{i+1}·y_i + a_i
 — identical value, but for matmul/conv this is 2 ring matmuls per party
 instead of 3 (33% of the MPC linear-layer FLOPs removed).
+
+Binary-domain entry points (DESIGN.md §11): `bin_matmul` / `bin_conv2d`
+consume post-Sign ±1 activations (scale 0) directly — the product already
+sits at the activations' target scale, so no truncation opening rides the
+layer and the whole cost is the reshare round (3 ring elements per output
+slot, half the fused arithmetic path's 6).  With a :class:`PublicTensor`
+weight (public-model deployment) the layer degenerates to local share
+algebra: every party computes its full RSS pair z_s = x_s @ W itself —
+zero rounds, zero wire bytes, and the public weight's bounded encoding
+collapses the kernel limb grid (kernels/bin_rss_matmul.py).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -27,7 +38,7 @@ __all__ = ["reveal", "mul", "matmul", "conv2d", "truncate",
            "truncate_probabilistic", "linear_layer", "square",
            "set_matmul_mode", "set_fused_rounds", "fused_rounds",
            "mul_open", "matmul_truncate", "conv2d_truncate", "mul_truncate",
-           "square_truncate"]
+           "square_truncate", "PublicTensor", "bin_matmul", "bin_conv2d"]
 
 # "opt2" = fused-operand (2 matmuls/party); "paper3" = Algorithm 2 verbatim.
 _MATMUL_MODE = "opt2"
@@ -350,6 +361,126 @@ def conv2d_truncate(x: RSS, w: RSS, parties: Parties, stride: int = 1,
     wmat = w.reshape(kh * kw * cin_g, cout)
     return matmul_truncate(cols, wmat, parties, tag=tag, w_limbs=w_limbs,
                            bias_parts=bias_parts)
+
+
+# ---------------------------------------------------------------------------
+# Binary-domain linear engine (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PublicTensor:
+    """A *public* model tensor in ring encoding (public-weight deployment).
+
+    Unlike an :class:`RSS`, there is no party axis: every party holds the
+    same encoding, so linear algebra against shares is purely local.
+    ``limbs`` optionally carries the setup-time
+    :class:`kernels.bin_rss_matmul.PublicWeightLimbs` cache for the MXU
+    path (the adaptive public limb collapse — DESIGN.md §11).
+    """
+
+    enc: jax.Array                 # ring-encoded public value
+    limbs: object | None = None    # PublicWeightLimbs (matmul weights only)
+
+    def tree_flatten(self):
+        return (self.enc, self.limbs), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1])
+
+    @property
+    def shape(self):
+        return self.enc.shape
+
+
+def bin_matmul(x: RSS, w: RSS | PublicTensor, parties: Parties,
+               tag: str = "bin_matmul", dot=None, w_limbs=None,
+               bias_parts=None, bias_public=None) -> RSS:
+    """Binary-domain secure matmul: x holds post-Sign ±1 activations at
+    scale 0, so z = x @ w already sits at the weights' scale f — no
+    truncation opening ever rides this layer (DESIGN.md §11).
+
+    Shared weights (``w: RSS``): the additive products (fused-operand Alg 2,
+    optionally the one-launch Pallas kernel via ``w_limbs``) plus the
+    scale-f ``bias_parts`` go through ONE reshare round — 3 ring elements
+    per output slot, vs the arithmetic path's 6 (`matmul_truncate`).
+
+    Public weights (``w: PublicTensor``): every party computes its whole
+    replicated pair z_s = x_s @ W locally (it holds both x_s slots), so the
+    RSS invariant is rebuilt with ZERO rounds and ZERO bytes; the ledger
+    records the 0-cost entry so the protocol table can show the layer.
+    ``bias_public`` is the ring-encoded public bias, added via the slot-0
+    mask (`RSS.add_public`).
+    """
+    if isinstance(w, PublicTensor):
+        from ..kernels.ops import bin_rss_matmul_op
+        assert bias_parts is None, \
+            "public weights take bias_public (a public encoding), not " \
+            "additive bias_parts"
+        comm.record(tag, rounds=0, nbytes=0)
+        wl = w.limbs if w_limbs is None else w_limbs
+        if wl is not None:
+            z = bin_rss_matmul_op(x.shares, wl)
+        else:
+            d = dot or (lambda a, b: _ring_dot(a, b, x.ring))
+            z = jnp.stack([d(x.shares[i], w.enc)
+                           for i in range(x.shares.shape[0])])
+        out = RSS(z, x.ring)
+        if bias_public is not None:
+            out = out.add_public(bias_public)
+        return out
+    assert bias_public is None, \
+        "shared weights take additive bias_parts, not a public encoding"
+    z = _matmul_parts(x, w, dot, w_limbs)
+    if bias_parts is not None:
+        z = z + bias_parts
+    return _reshare(z, x.ring, parties, tag)
+
+
+def bin_conv2d(x: RSS, w: RSS | PublicTensor, parties: Parties,
+               stride: int = 1, padding: int = 0, groups: int = 1,
+               tag: str = "bin_conv", w_limbs=None, bias_parts=None,
+               bias_public=None) -> RSS:
+    """Binary-domain secure conv: im2col + `bin_matmul` (groups == 1), so
+    the post-Sign layer costs one reshare round (shared weights) or nothing
+    at all (public weights).  Public grouped (depthwise) convs run the
+    per-channel einsum locally on every held slot."""
+    if isinstance(w, PublicTensor):
+        assert bias_parts is None, \
+            "public weights take bias_public (a public encoding), not " \
+            "additive bias_parts"
+        kh, kw, cin_g, cout = (int(d) for d in w.shape)
+        if groups == 1:
+            cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
+            wmat = PublicTensor(w.enc.reshape(kh * kw * cin_g, cout), w.limbs)
+            return bin_matmul(cols, wmat, parties, tag=tag,
+                              bias_public=bias_public)
+        # depthwise: per-channel contraction against the public kernel,
+        # on every slot at once — still zero communication
+        b = int(x.shape[0])
+        cin = int(x.shape[3])
+        assert groups == cin and cin_g == 1 and cout % groups == 0
+        mult = cout // groups
+        cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
+        slots = cols.shares.shape[0]
+        cols5 = cols.shares.reshape(slots, b, ho, wo, kh * kw, cin)
+        wk = w.enc.reshape(kh * kw, cin, mult)
+        comm.record(tag, rounds=0, nbytes=0)
+        z = jnp.einsum("sbhwkc,kcm->sbhwcm", cols5, wk,
+                       preferred_element_type=x.ring.dtype)
+        out = RSS(z.reshape(slots, b, ho, wo, cout), x.ring)
+        if bias_public is not None:
+            out = out.add_public(bias_public)
+        return out
+    assert groups == 1, "shared depthwise convs use conv2d (same comm)"
+    assert bias_public is None, \
+        "shared weights take additive bias_parts, not a public encoding"
+    kh, kw, cin_g, cout = (int(d) for d in w.shape)
+    cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin_g, cout)
+    return bin_matmul(cols, wmat, parties, tag=tag, w_limbs=w_limbs,
+                      bias_parts=bias_parts)
 
 
 # ---------------------------------------------------------------------------

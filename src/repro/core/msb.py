@@ -18,8 +18,15 @@ activations are magnitude-bounded, which is the paper's implicit modelling
 assumption ("shares of integer r ∈ Z_2^{l-1}"); the bound is an explicit,
 tested parameter here.
 
-Online cost: 2 rounds, 6 ring elements / slot — matching the paper's claim
-of minimal communication vs SecureNN/Falcon's compare-based extraction.
+Online cost: 1 round, 6 ring elements / slot with the default round
+fusion (the multiply-open of DESIGN.md §8; `msb_extract_arith` then
+derives [MSB]^A locally); 2 rounds paper-faithful
+(`set_fused_rounds(False)`) — either way matching the paper's claim of
+minimal communication vs SecureNN/Falcon's compare-based extraction.
+All slot views and the B2A reshare go through the active transport
+backend (DESIGN.md §1).  The Sign bit this module feeds is what puts
+activations in the ±1 scale-0 domain the binary-domain linear engine
+exploits (DESIGN.md §11).
 """
 from __future__ import annotations
 

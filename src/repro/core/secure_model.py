@@ -6,13 +6,31 @@ Two phases, mirroring the deployment:
   setup (model owner, plaintext):  walk the layer spec, apply the adaptive
     fusing rules — BN→Sign folds into a shared threshold (eq. 8), BN→ReLU
     folds into the preceding linear's (W, b) (eqs. 10–11) — then secret-share
-    the resulting weights.
+    the resulting weights (or keep them public, see below).
 
-  infer (all parties):  data owner shares the input; every layer runs its
-    protocol: Alg 2 linear (+Π_trunc), Alg 3+4 Sign, Alg 3+5 ReLU, fused
-    Sign-maxpool (§3.6).  Sign activations travel as ±1 *integers* (scale 0),
-    so products after a Sign layer carry a single 2^f scale — the ring-32
-    fixed point stays inside the MSB-extraction bound.
+  infer (all parties):  data owner shares the input; every layer runs the
+    *cheapest applicable* protocol.  The compiler assigns each linear layer
+    a path from the binary-domain taxonomy (DESIGN.md §11):
+
+      arith       fixed-point input × shared weights — Alg 2 + Π_trunc,
+                  fused to one opening round (6 ring elements / output).
+      bin-shared  post-Sign ±1 input (scale 0) × shared weights — the
+                  product lands at scale f, so the layer is ONE reshare
+                  round (3 elements / output), bias riding the parts
+                  (`linear.bin_matmul` / `bin_conv2d`).
+      bin-public  public weights (`compile_secure(..., weights="public")`,
+                  the private-input / public-model deployment): every party
+                  rebuilds its whole RSS pair locally — zero rounds, zero
+                  wire bytes on post-Sign layers; non-binary inputs keep
+                  only the truncation opening.
+
+    Sign activations travel as ±1 *integers* (scale 0), so products after a
+    Sign layer carry a single 2^f scale — the ring-32 fixed point stays
+    inside the MSB-extraction bound.  ``binary_linear="generic"`` routes
+    post-Sign layers through the generic Alg-2 machinery (bit-identity
+    reference for the binary engine); ``binary_linear="off"`` is the
+    binarization-unaware ablation (lift ±1 to scale f, pay the full
+    arithmetic opening).
 """
 from __future__ import annotations
 
@@ -23,19 +41,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.bin_rss_matmul import public_weight_limbs
 from ..kernels.rss_matmul import precompute_weight_limbs
 from ..nn.bnn import ALL_NETS, INPUT_SHAPES, L
 from . import comm, transport
 from .activation import (relu_from_msb, relu_from_msb_arith, sign_from_msb,
                          sign_from_msb_arith)
-from .linear import (conv2d, conv2d_truncate, fused_rounds, linear_layer,
-                     matmul, matmul_truncate, reveal, truncate)
+from .linear import (PublicTensor, bin_conv2d, bin_matmul, conv2d,
+                     conv2d_truncate, fused_rounds, linear_layer, matmul,
+                     matmul_truncate, reveal, truncate)
 from .msb import msb_extract, msb_extract_arith
 from .norm import fuse_bn_linear, fuse_bn_sign_threshold
 from .pooling import secure_maxpool, sign_maxpool_fused
 from .randomness import Parties
 from .ring import RingSpec, default_ring
 from .rss import RSS, share
+
+WEIGHT_MODES = ("shared", "public")
+BINARY_LINEAR_MODES = ("auto", "generic", "off")
 
 
 @dataclasses.dataclass
@@ -45,6 +68,8 @@ class SecureModel:
     net: str
     comm_per_query: comm.CommLedger | None = None
     use_kernel: bool = False
+    weights: str = "shared"        # "shared" | "public"  (DESIGN.md §11)
+    binary_linear: str = "auto"    # "auto" | "generic" | "off"
 
 
 def _fold_bn(spec, params, i):
@@ -55,17 +80,38 @@ def _fold_bn(spec, params, i):
 
 def compile_secure(params: dict, net: str, key,
                    ring: RingSpec | None = None,
-                   use_kernel_dot: bool = False) -> SecureModel:
-    """Model-owner setup: fuse + share.  `params` are the trained plaintext
-    parameters (bnn.py layout).
+                   use_kernel_dot: bool = False,
+                   weights: str = "shared",
+                   binary_linear: str = "auto") -> SecureModel:
+    """Model-owner setup: fuse + share (or publish).  `params` are the
+    trained plaintext parameters (bnn.py layout).
 
     ``use_kernel_dot=True`` additionally pre-decomposes every linear/conv
     weight-share stack (and its fused operand w_i + w_{i+1}) into cached
     int8 limbs, so `secure_infer` routes the layer through the single-launch
     3-party Pallas kernel — weight limbs are never recomputed per query.
-    Depthwise (grouped) convs keep the einsum path (no kernel limbs)."""
+    Depthwise (grouped) convs keep the einsum path (no kernel limbs).
+
+    ``weights="public"`` keeps model parameters in the clear (the
+    private-input / public-model deployment, DESIGN.md §11): linear layers
+    become local share algebra (zero wire bytes on post-Sign layers) and
+    the kernel cache uses the adaptive public limb collapse
+    (`kernels.bin_rss_matmul.public_weight_limbs` — 1–3 limbs instead of a
+    share's unconditional 4).  ``binary_linear`` selects the post-Sign
+    routing: "auto" = the binary-domain engine, "generic" = the plain Alg-2
+    machinery (bit-identity reference), "off" = binarization-unaware
+    ablation (±1 lifted to scale f, full truncation opening paid)."""
+    assert weights in WEIGHT_MODES, weights
+    assert binary_linear in BINARY_LINEAR_MODES, binary_linear
+    # "generic" is the bit-identity reference for the bin-SHARED engine;
+    # public weights have no generic Alg-2 route, so reject the combination
+    # instead of silently behaving like "auto"
+    assert not (weights == "public" and binary_linear == "generic"), \
+        'binary_linear="generic" is a shared-weights reference mode; ' \
+        'use "auto" or "off" with weights="public"'
     ring = ring or default_ring()
     spec = ALL_NETS[net]
+    public = weights == "public"
     ops: list[dict[str, Any]] = []
     i = 0
     kidx = 0
@@ -101,14 +147,23 @@ def compile_secure(params: dict, net: str, key,
                     w_parts[-1], b = fuse_bn_linear(w_parts[-1], b, g, beta,
                                                     mu, var)
                     i += 1
-            op = {"op": l.kind, "k": l.k, "stride": l.stride, "pad": l.pad,
-                  "w": [share(w, nk(), ring) for w in w_parts],
-                  "b": share(b, nk(), ring),
-                  "sign_threshold": (share(sign_threshold, nk(), ring)
-                                     if sign_threshold is not None else None)}
-            if use_kernel_dot:
-                op["wlimbs"] = [_weight_limbs_for(wr, l.kind, j)
-                                for j, wr in enumerate(op["w"])]
+            op = {"op": l.kind, "k": l.k, "stride": l.stride, "pad": l.pad}
+            if public:
+                op["pub_w"] = [_public_weight(w, l.kind, j, ring,
+                                              use_kernel_dot)
+                               for j, w in enumerate(w_parts)]
+                op["pub_b"] = np.asarray(ring.encode(b))
+                op["pub_thresh"] = (np.asarray(ring.encode(sign_threshold))
+                                    if sign_threshold is not None else None)
+            else:
+                op["w"] = [share(w, nk(), ring) for w in w_parts]
+                op["b"] = share(b, nk(), ring)
+                op["sign_threshold"] = (share(sign_threshold, nk(), ring)
+                                        if sign_threshold is not None
+                                        else None)
+                if use_kernel_dot:
+                    op["wlimbs"] = [_weight_limbs_for(wr, l.kind, j)
+                                    for j, wr in enumerate(op["w"])]
             ops.append(op)
         elif l.kind == "act":
             ops.append({"op": "sign" if l.act == "sign" else "relu"})
@@ -117,15 +172,59 @@ def compile_secure(params: dict, net: str, key,
             g, beta, mu, var = _fold_bn(spec, params, i)
             scale = g / np.sqrt(var + 1e-5)
             shift = beta - mu * scale
-            ops.append({"op": "affine", "scale": share(scale, nk(), ring),
-                        "shift": share(shift, nk(), ring)})
+            if public:
+                ops.append({"op": "affine",
+                            "pub_scale": np.asarray(ring.encode(scale)),
+                            "pub_shift": np.asarray(ring.encode(shift))})
+            else:
+                ops.append({"op": "affine", "scale": share(scale, nk(), ring),
+                            "shift": share(shift, nk(), ring)})
         elif l.kind == "maxpool":
             ops.append({"op": "maxpool"})
         elif l.kind == "flatten":
             ops.append({"op": "flatten"})
         i += 1
+    _annotate_binary_paths(ops)
     return SecureModel(ops=ops, ring=ring, net=net,
-                       use_kernel=use_kernel_dot)
+                       use_kernel=use_kernel_dot, weights=weights,
+                       binary_linear=binary_linear)
+
+
+def _annotate_binary_paths(ops: list) -> None:
+    """Static per-layer input-domain analysis (DESIGN.md §11).
+
+    Walks the compiled op list with the same transition rules the executor
+    applies at runtime and stamps every linear op with ``binary_in``: True
+    iff the layer spec guarantees its input is a Sign layer's ±1 integers
+    at scale 0 (maxpool and flatten preserve the domain; linear / ReLU /
+    affine leave it).  The executor dispatches paths off this flag, so the
+    routing is decided at compile time, not traced state."""
+    binary = False
+    for op in ops:
+        kind = op["op"]
+        if kind in ("conv", "sepconv", "fc"):
+            op["binary_in"] = binary
+            binary = False
+        elif kind == "sign":
+            binary = True
+        elif kind in ("relu", "affine"):
+            binary = False
+        # maxpool / flatten: domain-preserving
+
+
+def _public_weight(w: np.ndarray, kind: str, part_idx: int, ring: RingSpec,
+                   use_kernel_dot: bool) -> PublicTensor:
+    """Encode one public weight tensor; cache its adaptive public limbs for
+    the matmul-able halves when the kernel path is requested."""
+    enc = jnp.asarray(ring.encode(w))
+    limbs = None
+    if use_kernel_dot:
+        if kind == "fc":
+            limbs = public_weight_limbs(enc)
+        elif kind == "conv" or (kind == "sepconv" and part_idx == 1):
+            kh, kw, cin_g, cout = (int(d) for d in enc.shape)
+            limbs = public_weight_limbs(enc.reshape(kh * kw * cin_g, cout))
+    return PublicTensor(enc, limbs)
 
 
 def _weight_limbs_for(w: RSS, kind: str, part_idx: int):
@@ -140,6 +239,114 @@ def _weight_limbs_for(w: RSS, kind: str, part_idx: int):
     return None  # depthwise half of a sepconv
 
 
+def _infer_linear_shared(h: RSS, op: dict, parties: Parties, idx: int,
+                         ring: RingSpec, binary_in: bool,
+                         binary_engine: bool) -> RSS:
+    """One shared-weight linear layer, dispatched by input domain.
+
+    ``binary_in`` + ``binary_engine``: the bin-shared path — product at
+    scale f, bias riding the additive parts, ONE reshare round
+    (`bin_matmul` / `bin_conv2d`, DESIGN.md §11).  Otherwise the arithmetic
+    path: fused matmul+Π_trunc opening at scale 2f, or (``binary_in`` with
+    the "generic" routing) the plain Alg-2 round without truncation —
+    bit-identical to the bin-shared path, kept as its reference."""
+    tp = transport.current()
+    wlimbs = op.get("wlimbs") or [None] * len(op["w"])
+    kind = op["op"]
+    if kind == "sepconv":
+        # separable: depthwise then pointwise (Alg 2 twice, Fig 3); the
+        # depthwise half stays on the einsum path.  A post-Sign depthwise
+        # product is already at scale f — reshare-only, no truncation.
+        cin = int(h.shape[-1])
+        h = conv2d(h, op["w"][0], parties, stride=op["stride"],
+                   padding=op["pad"], groups=cin, tag=f"l{idx}.dwconv")
+        if not binary_in:
+            h = truncate(h, parties, tag=f"l{idx}.dwtrunc")
+        at_2f = True
+        lin, w_rss, wl = "pw", op["w"][1], wlimbs[1]
+    else:
+        at_2f = not binary_in
+        lin, w_rss, wl = kind, op["w"][0], wlimbs[0]
+    if not at_2f and binary_engine:
+        # bin-shared engine: scale-f bias rides the additive parts through
+        # the single reshare round — 3 ring elements per output slot
+        bias = tp.own_view(op["b"].shares).reshape(
+            (tp.parts_slots,) + (1,) * (h.ndim - 1) + (-1,))
+        if lin == "fc":
+            return bin_matmul(h, w_rss, parties, tag=f"l{idx}.fc.bin",
+                              w_limbs=wl, bias_parts=bias)
+        return bin_conv2d(h, w_rss, parties, stride=op["stride"],
+                          padding=op["pad"], tag=f"l{idx}.conv.bin",
+                          w_limbs=wl, bias_parts=bias)
+    if at_2f and fused_rounds():
+        # beyond-paper default: product + bias + Π_trunc in the one
+        # reshare round (matmul_truncate / conv2d_truncate) — the
+        # bias rides the additive parts, so only the own share
+        bias = tp.own_view(op["b"].shares).reshape(
+            (tp.parts_slots,) + (1,) * (h.ndim - 1) + (-1,))
+        bias = bias * jnp.asarray(ring.scale, ring.dtype)
+        if lin == "fc":
+            return matmul_truncate(h, w_rss, parties, tag=f"l{idx}.fc",
+                                   w_limbs=wl, bias_parts=bias)
+        if lin == "conv":
+            return conv2d_truncate(h, w_rss, parties, stride=op["stride"],
+                                   padding=op["pad"], tag=f"l{idx}.conv",
+                                   w_limbs=wl, bias_parts=bias)
+        return conv2d_truncate(h, w_rss, parties, tag=f"l{idx}.pwconv",
+                               w_limbs=wl, bias_parts=bias)
+    if lin == "fc":
+        z = matmul(h, w_rss, parties, tag=f"l{idx}.fc", w_limbs=wl)
+    elif lin == "conv":
+        z = conv2d(h, w_rss, parties, stride=op["stride"],
+                   padding=op["pad"], tag=f"l{idx}.conv", w_limbs=wl)
+    else:
+        z = conv2d(h, w_rss, parties, tag=f"l{idx}.pwconv", w_limbs=wl)
+    # z is a full RSS here, so the bias is added share-wise
+    bias = op["b"].shares.reshape(
+        (z.shares.shape[0],) + (1,) * (z.ndim - 1) + (-1,))
+    if at_2f:
+        bias = bias * jnp.asarray(ring.scale, ring.dtype)
+    z = RSS(z.shares + bias, ring)
+    if at_2f:
+        z = truncate(z, parties, tag=f"l{idx}.trunc")
+    return z
+
+
+def _infer_linear_public(h: RSS, op: dict, parties: Parties, idx: int,
+                         ring: RingSpec, binary_in: bool) -> RSS:
+    """One public-weight linear layer (bin-public path, DESIGN.md §11).
+
+    Every product is local share algebra — the only protocol cost left is
+    the truncation opening when the input still carries scale f (first
+    layer, ReLU nets, the depthwise→pointwise seam); post-Sign layers cost
+    zero rounds and zero bytes."""
+    kind = op["op"]
+    lift = jnp.asarray(ring.frac, ring.dtype)
+    pub_b = jnp.asarray(op["pub_b"])
+    if kind == "sepconv":
+        cin = int(h.shape[-1])
+        h = bin_conv2d(h, op["pub_w"][0], parties, stride=op["stride"],
+                       padding=op["pad"], groups=cin, tag=f"l{idx}.dwconv.pub")
+        if not binary_in:
+            h = truncate(h, parties, tag=f"l{idx}.dwtrunc")
+        # pointwise input carries scale f, so the product lands at 2f
+        h = bin_conv2d(h, op["pub_w"][1], parties, tag=f"l{idx}.pwconv.pub",
+                       bias_public=pub_b << lift)
+        return truncate(h, parties, tag=f"l{idx}.trunc")
+    w = op["pub_w"][0]
+    bias = pub_b if binary_in else pub_b << lift
+    if kind == "fc":
+        h = bin_matmul(h, w, parties, tag=f"l{idx}.fc.pub",
+                       bias_public=bias)
+    else:
+        h = bin_conv2d(h, w, parties, stride=op["stride"],
+                       padding=op["pad"], tag=f"l{idx}.conv.pub",
+                       bias_public=bias)
+    if not binary_in:
+        h = truncate(h, parties, tag=f"l{idx}.trunc")
+    return h
+
+
 def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
                  reveal_output: bool = True):
     """Run one secure inference. x_shares: RSS of (B,H,W,C) or (B,D).
@@ -149,7 +356,8 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
     DESIGN.md §8; `set_fused_rounds(False)` restores the paper-faithful
     round structure.  Models compiled with use_kernel_dot=True route every
     non-depthwise linear through the fused 3-party Pallas kernel with the
-    cached weight limbs."""
+    cached weight limbs.  Each linear layer runs the path the compiler
+    assigned it (arith / bin-shared / bin-public — DESIGN.md §11)."""
     ring = model.ring
     h = x_shares
     prev_sign = False  # is the current activation ±1-integer valued?
@@ -159,69 +367,32 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
         kind = op["op"]
         if kind in ("conv", "sepconv", "fc"):
             # product scale: input(±1 int: 0 | fixed: f) + W(f) => f or 2f
-            wlimbs = op.get("wlimbs") or [None] * len(op["w"])
-            if kind == "sepconv":
-                # separable: depthwise then pointwise (Alg 2 twice, Fig 3);
-                # the depthwise half stays on the einsum path
-                cin = int(h.shape[-1])
-                h = conv2d(h, op["w"][0], parties, stride=op["stride"],
-                           padding=op["pad"], groups=cin,
-                           tag=f"l{idx}.dwconv")
-                if not prev_sign:
-                    h = truncate(h, parties, tag=f"l{idx}.dwtrunc")
-                at_2f = True
-                lin, w_rss, wl = "pw", op["w"][1], wlimbs[1]
+            binary_in = op.get("binary_in", False)
+            if model.binary_linear == "off" and binary_in:
+                # binarization-unaware ablation: lift ±1 to scale f and pay
+                # the full arithmetic opening
+                h = h.mul_public_int(jnp.asarray(ring.scale, ring.dtype))
+                binary_in = False
+            if model.weights == "public":
+                h = _infer_linear_public(h, op, parties, idx, ring,
+                                         binary_in)
             else:
-                at_2f = not prev_sign
-                lin, w_rss, wl = kind, op["w"][0], wlimbs[0]
-            tp = transport.current()
-            if at_2f and fused_rounds():
-                # beyond-paper default: product + bias + Π_trunc in the one
-                # reshare round (matmul_truncate / conv2d_truncate) — the
-                # bias rides the additive parts, so only the own share
-                bias = tp.own_view(op["b"].shares).reshape(
-                    (tp.parts_slots,) + (1,) * (h.ndim - 1) + (-1,))
-                bias = bias * jnp.asarray(ring.scale, ring.dtype)
-                if lin == "fc":
-                    h = matmul_truncate(h, w_rss, parties, tag=f"l{idx}.fc",
-                                        w_limbs=wl, bias_parts=bias)
-                elif lin == "conv":
-                    h = conv2d_truncate(h, w_rss, parties,
-                                        stride=op["stride"],
-                                        padding=op["pad"],
-                                        tag=f"l{idx}.conv", w_limbs=wl,
-                                        bias_parts=bias)
-                else:
-                    h = conv2d_truncate(h, w_rss, parties,
-                                        tag=f"l{idx}.pwconv", w_limbs=wl,
-                                        bias_parts=bias)
-            else:
-                if lin == "fc":
-                    z = matmul(h, w_rss, parties, tag=f"l{idx}.fc",
-                               w_limbs=wl)
-                elif lin == "conv":
-                    z = conv2d(h, w_rss, parties, stride=op["stride"],
-                               padding=op["pad"], tag=f"l{idx}.conv",
-                               w_limbs=wl)
-                else:
-                    z = conv2d(h, w_rss, parties, tag=f"l{idx}.pwconv",
-                               w_limbs=wl)
-                # z is a full RSS here, so the bias is added share-wise
-                bias = op["b"].shares.reshape(
-                    (z.shares.shape[0],) + (1,) * (z.ndim - 1) + (-1,))
-                if at_2f:
-                    bias = bias * jnp.asarray(ring.scale, ring.dtype)
-                z = RSS(z.shares + bias, ring)
-                if at_2f:
-                    z = truncate(z, parties, tag=f"l{idx}.trunc")
-                h = z
+                h = _infer_linear_shared(
+                    h, op, parties, idx, ring, binary_in,
+                    binary_engine=model.binary_linear == "auto")
             prev_sign = False
-            pending_sign_threshold = op.get("sign_threshold")
+            pending_sign_threshold = (op.get("sign_threshold")
+                                      if model.weights == "shared"
+                                      else op.get("pub_thresh"))
         elif kind == "sign":
             if pending_sign_threshold is not None:
                 t = pending_sign_threshold
-                h = RSS(h.shares + t.shares.reshape(
-                    (h.shares.shape[0],) + (1,) * (h.ndim - 1) + (-1,)), ring)
+                if isinstance(t, RSS):
+                    h = RSS(h.shares + t.shares.reshape(
+                        (h.shares.shape[0],) + (1,) * (h.ndim - 1) + (-1,)),
+                        ring)
+                else:  # public threshold (ring-encoded array)
+                    h = h.add_public(t)
                 pending_sign_threshold = None
             if fused_rounds():
                 # 1 online round: multiply-open + local Alg-4 (activation.py)
@@ -250,12 +421,19 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
             prev_sign = False
         elif kind == "affine":
             from .linear import mul, mul_truncate
-            if fused_rounds():
+            if model.weights == "public":
+                # public BN affine: local mult by the encoded scale (2f),
+                # truncate, public shift — no multiplication protocol
+                h = RSS(h.shares * jnp.asarray(op["pub_scale"]), ring)
+                h = truncate(h, parties, tag=f"aff{idx}.tr")
+                h = h.add_public(jnp.asarray(op["pub_shift"]))
+            elif fused_rounds():
                 h = mul_truncate(h, op["scale"], parties, tag=f"aff{idx}")
+                h = h + op["shift"]
             else:
                 h = truncate(mul(h, op["scale"], parties, tag=f"aff{idx}"),
                              parties, tag=f"aff{idx}.tr")
-            h = h + op["shift"]
+                h = h + op["shift"]
             prev_sign = False
         elif kind == "maxpool":
             if prev_sign:
@@ -273,12 +451,6 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
     return h
 
 
-def _bias_scale(ring: RingSpec, operand_is_int: bool):
-    """Bias lives at scale f; lift to 2f only when the product carries 2f."""
-    return (jnp.asarray(1, ring.dtype) if operand_is_int
-            else jnp.asarray(ring.scale, ring.dtype))
-
-
 def secure_infer_cost(model: SecureModel, input_shape,
                       parties_key=None) -> comm.CommLedger:
     """Trace-only communication ledger for one query batch."""
@@ -291,23 +463,63 @@ def secure_infer_cost(model: SecureModel, input_shape,
     return comm.estimate_cost(run, x)
 
 
+def post_sign_linear_cost(model: SecureModel,
+                          led: comm.CommLedger) -> tuple[int, int]:
+    """(online bytes, online rounds) summed over the linear layers the
+    compiler marked ``binary_in`` — the post-Sign layers the binary-domain
+    engine targets (DESIGN.md §11).  Shared by the acceptance pins
+    (tests/test_bin_linear.py) and the DESIGN.md cost-table generator so
+    the two can never drift."""
+    idxs = {i for i, op in enumerate(model.ops)
+            if op["op"] in ("conv", "sepconv", "fc")
+            and op.get("binary_in", False)}
+    nbytes = rounds = 0
+    for tag, (r, b) in led.by_tag.items():
+        if tag.startswith("pre:"):
+            continue
+        head = tag.split(".", 1)[0]
+        if head.startswith("l") and head[1:].isdigit() \
+                and int(head[1:]) in idxs:
+            nbytes += b
+            rounds += r
+    return nbytes, rounds
+
+
 # ---------------------------------------------------------------------------
 # Mesh backend: one real per-party program over a size-3 "party" mesh axis
 # ---------------------------------------------------------------------------
 
-def _split_arrays(tree):
-    """Partition a pytree into its jax-array leaves (party-stacked tensors)
-    and a rebuild closure for the remaining static structure."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    is_arr = [isinstance(l, (jax.Array, np.ndarray)) for l in leaves]
-    arrays = tuple(l for l, a in zip(leaves, is_arr) if a)
+def _is_public_leaf(path) -> bool:
+    """A model-ops leaf is public iff it sits under a ``pub_*`` dict key
+    (public weights/bias/threshold/affine of the bin-public path): such
+    tensors are replicated to every party, not party-sharded."""
+    return any(isinstance(k, jax.tree_util.DictKey)
+               and str(k.key).startswith("pub") for k in path)
 
-    def rebuild(new_arrays):
-        it = iter(new_arrays)
-        new_leaves = [next(it) if a else l for l, a in zip(leaves, is_arr)]
+
+def _split_arrays(tree):
+    """Partition a pytree into its party-stacked jax-array leaves, its
+    replicated PUBLIC array leaves (``pub_*`` entries — no party axis),
+    and a rebuild closure for the remaining static structure."""
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    kinds = []   # "shared" | "public" | None per leaf
+    for path, leaf in leaves_p:
+        if not isinstance(leaf, (jax.Array, np.ndarray)):
+            kinds.append(None)
+        else:
+            kinds.append("public" if _is_public_leaf(path) else "shared")
+    arrays = tuple(l for (_, l), k in zip(leaves_p, kinds) if k == "shared")
+    pub_arrays = tuple(l for (_, l), k in zip(leaves_p, kinds)
+                       if k == "public")
+
+    def rebuild(new_arrays, new_pub):
+        it, itp = iter(new_arrays), iter(new_pub)
+        new_leaves = [next(it) if k == "shared"
+                      else next(itp) if k == "public" else l
+                      for (_, l), k in zip(leaves_p, kinds)]
         return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
-    return arrays, rebuild
+    return arrays, pub_arrays, rebuild
 
 
 def make_secure_infer_mesh(model: SecureModel, mesh, *,
@@ -337,25 +549,31 @@ def make_secure_infer_mesh(model: SecureModel, mesh, *,
 
     assert mesh.shape[party_axis] == 3, \
         f"mesh axis {party_axis!r} must have size 3"
-    arrays, rebuild = _split_arrays(model.ops)
+    arrays, pub_arrays, rebuild = _split_arrays(model.ops)
     for a in arrays:
         assert int(a.shape[0]) == 3, f"expected party-stacked array: {a.shape}"
 
     x_spec = P(party_axis, batch_axis)
     w_spec = P(party_axis)
     n_arr = len(arrays)
-    in_specs = (P(), x_spec, x_spec, (w_spec,) * n_arr, (w_spec,) * n_arr)
+    # public (pub_*) tensors are replicated: every party holds the clear
+    # model, so their in_spec carries no party axis (bin-public path)
+    in_specs = (P(), x_spec, x_spec, (w_spec,) * n_arr, (w_spec,) * n_arr,
+                (P(),) * len(pub_arrays))
     out_specs = P(party_axis, batch_axis)
     cnt0 = 0
 
-    def inner(keys, x_own, x_nxt, arrs_own, arrs_nxt):
+    def inner(keys, x_own, x_nxt, arrs_own, arrs_nxt, pub_arrs):
         t = transport.MeshTransport(party_axis)
         with transport.use_transport(t):
             prt = Parties(keys, cnt0)
             ops = rebuild([t.ingest(o, n) for o, n in zip(arrs_own,
-                                                          arrs_nxt)])
+                                                          arrs_nxt)],
+                          pub_arrs)
             m = SecureModel(ops=ops, ring=model.ring, net=model.net,
-                            use_kernel=model.use_kernel)
+                            use_kernel=model.use_kernel,
+                            weights=model.weights,
+                            binary_linear=model.binary_linear)
             x = RSS(t.ingest(x_own, x_nxt), model.ring)
             out = secure_infer(m, x, prt, reveal_output=reveal_output)
             if reveal_output:
@@ -372,7 +590,8 @@ def make_secure_infer_mesh(model: SecureModel, mesh, *,
     arrs_nxt = tuple(roll(a) for a in arrays)
 
     def fn(keys, x_stack):
-        return sm(keys, x_stack, roll(x_stack), arrays, arrs_nxt)
+        return sm(keys, x_stack, roll(x_stack), arrays, arrs_nxt,
+                  pub_arrays)
 
     return fn
 

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .bin_rss_matmul import PublicWeightLimbs, bin_rss_matmul_parts
 from .binary_matmul import binary_binary_matmul, binary_weight_matmul
 from .flash_attention import flash_attention
 from .ring_matmul import ring_matmul
@@ -85,6 +86,22 @@ def rss_matmul_dot(a: jax.Array, b: jax.Array) -> jax.Array:
     a2 = a.reshape(-1, a.shape[-1])
     out = ring_matmul_op(a2, b)
     return out.reshape(lead + (b.shape[-1],))
+
+
+def bin_rss_matmul_op(x_stack: jax.Array,
+                      weights: PublicWeightLimbs) -> jax.Array:
+    """Local share-stack product with a PUBLIC weight matrix (binary-domain
+    engine, DESIGN.md §11): z_s = x_s @ W for every share slot the caller
+    holds — no communication, no neighbour operand, and the public limb
+    grid collapsed to ``weights.n_limbs`` (1 for binarized weights).
+
+    x_stack: (S, ..., K) uint32 RSS stack (S = 3 stacked sim / 2 per-party
+    pair); leading dims folded into M.  Returns (S, ..., N)."""
+    s = x_stack.shape[0]
+    lead = x_stack.shape[1:-1]
+    x2 = x_stack.reshape(s, -1, x_stack.shape[-1])
+    out = bin_rss_matmul_parts(x2, weights)
+    return out.reshape((s,) + lead + (weights.n,))
 
 
 def rss_matmul_parts_op(x_stack: jax.Array, x_next_stack: jax.Array,

@@ -25,6 +25,18 @@ stack from a single pallas_call:
     dots per (party, m, n, k) cell — vs 6 kernel launches × 10 dots with
     duplicated operand traffic for the per-dot path.
 
+Both operands here are *shares* — uniform mod 2^32 — so every limb grid is
+the full 4×4 with 10 surviving pairs (20 dots per cell across the two
+fused-operand matmuls).  When the weights are public instead, the bounded
+encoding collapses the weight limbs to 1–3 and the whole layer needs no
+neighbour operand — that variant lives in `bin_rss_matmul.py` (the
+binary-domain engine's bin-public path, DESIGN.md §11).
+
+The caller views (own/next activation stacks, per-party weight slots) come
+from the active transport backend (DESIGN.md §1): the stacked simulation
+passes the full (3, ...) stacks, a MeshTransport per-party program passes
+its replicated pair with S = 1 local slot.
+
 Interpret-mode correct everywhere; TPU-shaped (128-aligned MXU tiles,
 int8×int8→int32 accumulation whose wraparound *is* mod-2^32 arithmetic).
 See DESIGN.md §3.

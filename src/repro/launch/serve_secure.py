@@ -12,11 +12,20 @@ runs the full CBNN protocol stack under either transport backend:
     and the query batch is sharded over the remaining devices as a §6
     "data" axis when the batch divides.
 
+``--weights`` selects the deployment scenario (DESIGN.md §11, README
+"Threat model & deployment scenarios"):
+
+  * ``shared`` (default) — the model is secret-shared too; post-Sign
+    layers run the bin-shared reshare-only path.
+  * ``public`` — private input, public model: linear layers are local
+    share algebra (zero wire bytes on post-Sign layers) and the kernel
+    uses the adaptive public limb collapse.
+
 Reports throughput plus the per-query CommLedger and its modeled LAN/WAN
 wall-clock.
 
   PYTHONPATH=src python -m repro.launch.serve_secure --net MnistNet1 \
-      --backend mesh --batch 32 --queries 4
+      --backend mesh --batch 32 --queries 4 --weights public
 """
 import argparse
 import json
@@ -25,7 +34,8 @@ import sys
 import time
 
 
-def build(net: str, use_kernel: bool):
+def build(net: str, use_kernel: bool, weights: str = "shared",
+          binary_linear: str = "auto"):
     import jax
     from repro.core import RING32
     from repro.core.secure_model import compile_secure
@@ -33,7 +43,8 @@ def build(net: str, use_kernel: bool):
 
     params = bnn.init_bnn(jax.random.PRNGKey(0), net)
     model = compile_secure(params, net, jax.random.PRNGKey(1), RING32,
-                           use_kernel_dot=use_kernel)
+                           use_kernel_dot=use_kernel, weights=weights,
+                           binary_linear=binary_linear)
     return model
 
 
@@ -81,6 +92,16 @@ def main():
     ap.add_argument("--queries", type=int, default=4)
     ap.add_argument("--no-kernel", action="store_true",
                     help="skip the fused Pallas kernel (jnp ring dots)")
+    ap.add_argument("--weights", choices=("shared", "public"),
+                    default="shared",
+                    help="deployment scenario: secret-shared model (full "
+                         "CBNN guarantees) or public model (private input "
+                         "only; linear layers cost zero wire bytes)")
+    ap.add_argument("--binary-linear", choices=("auto", "generic", "off"),
+                    default="auto",
+                    help="post-Sign linear routing (DESIGN.md §11): the "
+                         "binary-domain engine, the generic Alg-2 "
+                         "reference, or the binarization-unaware ablation")
     ap.add_argument("--json", default="", metavar="PATH")
     args = ap.parse_args()
 
@@ -92,7 +113,8 @@ def main():
     from repro.nn.bnn import INPUT_SHAPES
 
     shape = INPUT_SHAPES[args.net]
-    model = build(args.net, not args.no_kernel)
+    model = build(args.net, not args.no_kernel, args.weights,
+                  args.binary_linear)
     run, mesh = make_runner(model, args.backend, args.batch)
     if mesh is not None:
         print(f"[serve_secure] mesh axes "
@@ -117,7 +139,8 @@ def main():
     ips = qps * args.batch
 
     print(f"[serve_secure] {args.net} backend={args.backend} "
-          f"batch={args.batch} kernel={not args.no_kernel}: "
+          f"batch={args.batch} kernel={not args.no_kernel} "
+          f"weights={args.weights}: "
           f"{args.queries} queries in {dt:.2f}s = {qps:.2f} q/s "
           f"({ips:.1f} img/s)")
     print(f"[serve_secure] per-query comm: {led.megabytes:.3f} MB online "
@@ -126,8 +149,8 @@ def main():
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"net": args.net, "backend": args.backend,
-                       "batch": args.batch, "img_per_s": ips,
-                       "query_per_s": qps,
+                       "batch": args.batch, "weights": args.weights,
+                       "img_per_s": ips, "query_per_s": qps,
                        "comm_mb_per_query": led.megabytes,
                        "rounds": led.rounds}, f, indent=2)
         print(f"[serve_secure] wrote {args.json}")

@@ -252,6 +252,31 @@ def party_wire_bytes_from_hlo(hlo_text: str) -> dict:
     return out
 
 
+def ledger_vs_wire(hlo_text: str, ledger_bytes: int,
+                   data_replicas: int = 1) -> dict:
+    """Cross-check a CommLedger byte total against the physical wire bytes
+    of a compiled per-party SPMD program (DESIGN.md §1/§11).
+
+    ``ledger_bytes`` is the traced (online + offline) protocol total for
+    ONE data replica; on a composed party×data mesh pass the data-axis
+    size so the per-shard ledger scales to the wire sum of every replica's
+    rings/gathers.  Returns {wire_bytes, ledger_bytes, rel_diff, counts}.
+
+    Holds for every linear-engine path: the arith/bin-shared openings and
+    reshares appear as all-gathers/ppermutes byte-for-byte, and a
+    bin-public linear layer contributes NOTHING — a public-weight
+    post-Sign program section compiles to zero party collectives, which
+    this check confirms (wire == ledger == 0 over that span)."""
+    wire = party_wire_bytes_from_hlo(hlo_text)
+    total = ledger_bytes * data_replicas
+    diff = (abs(wire["total_bytes"] - total) / total if total
+            else float(wire["total_bytes"] != 0))
+    return {"wire_bytes": wire["total_bytes"], "ledger_bytes": total,
+            "rel_diff": diff,
+            "counts": {k: v["count"] for k, v in wire.items()
+                       if isinstance(v, dict)}}
+
+
 def summarize_memory(mem) -> dict:
     get = lambda attr: int(getattr(mem, attr, -1))
     return {

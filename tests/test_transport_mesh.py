@@ -23,12 +23,12 @@ from repro.nn import bnn
 
 
 def run_case(net, shape, batch, use_kernel, fused, mesh, batch_axis=None,
-             ulp_tol=0):
+             ulp_tol=0, **compile_kw):
     params = bnn.init_bnn(jax.random.PRNGKey(0), net)
     x = (np.random.default_rng(1).integers(0, 2, (batch,) + shape)
          .astype(np.float32) - 0.5)
     model = compile_secure(params, net, jax.random.PRNGKey(2), RING32,
-                           use_kernel_dot=use_kernel)
+                           use_kernel_dot=use_kernel, **compile_kw)
     xs = share(x, jax.random.PRNGKey(4), RING32)
     try:
         set_fused_rounds(fused)
@@ -49,7 +49,7 @@ def run_case(net, shape, batch, use_kernel, fused, mesh, batch_axis=None,
             (net, batch_axis, np.abs(a - b).max())
         assert (a.argmax(-1) == b.argmax(-1)).all()
     print("case OK:", net, "kernel" if use_kernel else "jnp",
-          "fused" if fused else "paper", batch_axis)
+          "fused" if fused else "paper", batch_axis, compile_kw)
 
 
 mesh3 = jax.sharding.Mesh(np.asarray(jax.devices()[:3]), ("party",))
@@ -68,6 +68,15 @@ run_case("MnistNet2", (28, 28, 1), 2, False, False, mesh3)
 # trunc-mask draws differ from the full-batch sim, so allow ulp noise
 run_case("MnistNet1", (28, 28, 1), 4, True, True, mesh32, "data",
          ulp_tol=8)
+# binary-domain engine (DESIGN.md §11): public weights are replicated (not
+# party-sharded) under the mesh — jnp + kernel paths, fc + conv nets
+run_case("MnistNet1", (28, 28, 1), 4, False, True, mesh3, weights="public")
+run_case("MnistNet1", (28, 28, 1), 4, True, True, mesh3, weights="public")
+run_case("MnistNet3", (28, 28, 1), 2, True, True, mesh3, weights="public")
+# binarization-unaware ablation routes post-Sign layers through the full
+# arithmetic opening on both backends
+run_case("MnistNet1", (28, 28, 1), 4, False, True, mesh3,
+         binary_linear="off")
 print("OK")
 """
 
@@ -86,7 +95,7 @@ from repro.core.activation import secure_relu
 from repro.core.linear import matmul_truncate
 from repro.core.rss import RSS
 from repro.roofline.analyze import (collective_bytes_from_hlo,
-                                    party_wire_bytes_from_hlo)
+                                    ledger_vs_wire)
 
 d, dff, T = 16, 32, 8
 key = jax.random.PRNGKey(0)
@@ -128,25 +137,24 @@ def check(mesh, x_spec, label, data=1):
         jax.eval_shape(sm, *args)
     # the ledger traces the per-party program, so under a sharded batch it
     # meters ONE data replica's protocol; total wire = ledger x data
-    ledger_bytes = (led.nbytes + led.pre_nbytes) * data
-    assert ledger_bytes > 0 and led.rounds == 4, led.summary()
+    assert led.nbytes + led.pre_nbytes > 0 and led.rounds == 4, led.summary()
 
     hlo = jax.jit(sm).lower(*args).compile().as_text()
-    wire = party_wire_bytes_from_hlo(hlo)
-    print(label, "ledger", ledger_bytes, "wire", wire)
+    chk = ledger_vs_wire(hlo, led.nbytes + led.pre_nbytes,
+                         data_replicas=data)
+    print(label, chk)
 
     # every metered round exists as a real collective in the per-party HLO
-    assert wire["collective-permute"]["count"] >= 4, wire
-    assert wire["all-gather"]["count"] == 3, wire  # up/down opens + mulopen
+    assert chk["counts"]["collective-permute"] >= 4, chk
+    assert chk["counts"]["all-gather"] == 3, chk  # up/down opens + mulopen
 
     # bytes agree (the ledger is exact; allow header/layout slack)
-    diff = abs(wire["total_bytes"] - ledger_bytes) / ledger_bytes
-    assert diff < 0.02, (wire["total_bytes"], ledger_bytes)
+    assert chk["rel_diff"] < 0.02, chk
 
     # sanity: the roofline per-chip extractor sees the same instructions
     colls = collective_bytes_from_hlo(hlo)
     assert (colls["collective-permute"]["count"]
-            == wire["collective-permute"]["count"])
+            == chk["counts"]["collective-permute"])
 
 
 # party-only mesh: ledger == wire, byte for byte
@@ -157,6 +165,76 @@ check(jax.sharding.Mesh(np.asarray(jax.devices()[:3]), ("party",)),
 check(jax.sharding.Mesh(np.asarray(jax.devices()[:6]).reshape(3, 2),
                         ("party", "data")),
       P("party", "data"), "party x data:", data=2)
+
+# ---- binary-domain engine paths (DESIGN.md S11) ---------------------------
+from repro.core.linear import PublicTensor, bin_matmul
+from repro.core.activation import secure_sign
+from repro.roofline.analyze import ledger_vs_wire
+
+xb = share(np.where(rng.integers(0, 2, (T, d)), 1.0, -1.0)
+           .astype(np.float32) * 0.25, jax.random.fold_in(key, 5), RING32)
+w_pub = jnp.asarray(RING32.encode(rng.normal(0, 0.3, (d, dff))
+                                  .astype(np.float32)))
+w2_pub = jnp.asarray(RING32.encode(rng.normal(0, 0.3, (dff, d))
+                                   .astype(np.float32)))
+
+
+def inner_bin(keys, xo, xn, w1o, w1n):
+    t = transport.MeshTransport("party")
+    with transport.use_transport(t):
+        prt = Parties(keys)
+        xs = RSS(t.ingest(xo, xn), RING32)
+        s = secure_sign(xs, prt, tag="sign")          # -> {0,1} scale 0
+        s = s.mul_public_int(2).add_public(
+            jnp.asarray(-1, jnp.int32).astype(jnp.uint32))
+        w1s = RSS(t.ingest(w1o, w1n), RING32)
+        h = bin_matmul(s, w1s, prt, tag="bin.up")     # reshare-only round
+        h = bin_matmul(h, PublicTensor(w2_pub), prt,
+                       tag="bin.down.pub")            # ZERO collectives
+        # consume BOTH pair slots so DCE cannot drop the reshare ppermute
+        return h.shares[0:1] + h.shares[1:2]
+
+
+mesh_p = jax.sharding.Mesh(np.asarray(jax.devices()[:3]), ("party",))
+args_b = (keys, xb.shares, roll(xb.shares), w1.shares, roll(w1.shares))
+smb = transport.shard_map_compat(
+    inner_bin, mesh=mesh_p,
+    in_specs=(P(), P("party"), P("party"), P("party"), P("party")),
+    out_specs=P("party"), **transport.SHARD_MAP_CHECK_KW)
+with comm.track() as led_b:
+    jax.eval_shape(smb, *args_b)
+# post-Sign shared layer: ONE reshare round, 3 elements/slot; the public
+# layer records 0 bytes and compiles to NO party collectives
+assert led_b.by_tag["bin.up"] == [1, 3 * T * dff * 4], led_b.summary()
+assert led_b.by_tag["bin.down.pub"] == [0, 0], led_b.summary()
+hlo_b = jax.jit(smb).lower(*args_b).compile().as_text()
+chk = ledger_vs_wire(hlo_b, led_b.nbytes + led_b.pre_nbytes)
+print("binary:", chk)
+assert chk["rel_diff"] < 0.02, chk
+
+# public-only program: the compiled per-party HLO has ZERO party
+# collectives — wire bytes 0 == ledger 0
+def inner_pub(keys, xo, xn):
+    t = transport.MeshTransport("party")
+    with transport.use_transport(t):
+        prt = Parties(keys)
+        xs = RSS(t.ingest(xo, xn), RING32)
+        h = bin_matmul(xs, PublicTensor(jnp.asarray(w_pub)), prt,
+                       tag="pub.only")
+        return t.own_view(h.shares)
+
+
+smp = transport.shard_map_compat(
+    inner_pub, mesh=mesh_p, in_specs=(P(), P("party"), P("party")),
+    out_specs=P("party"), **transport.SHARD_MAP_CHECK_KW)
+with comm.track() as led_p:
+    jax.eval_shape(smp, keys, xb.shares, roll(xb.shares))
+assert led_p.nbytes == 0 and led_p.rounds == 0, led_p.summary()
+hlo_p = jax.jit(smp).lower(keys, xb.shares, roll(xb.shares)) \
+    .compile().as_text()
+chk_p = ledger_vs_wire(hlo_p, 0)
+print("public:", chk_p)
+assert chk_p["wire_bytes"] == 0 and chk_p["rel_diff"] == 0, chk_p
 print("OK")
 """
 
