@@ -24,7 +24,18 @@ Deployment-mode suffixes (DESIGN.md §11):
 ``secure.comm.<net>.<mode>.kb`` rows record the per-query ONLINE wire
 kilobytes from the traced CommLedger in the us_per_call column, so the
 bytes trajectory (arith > binary > public) is machine-readable in
-BENCH_secure_e2e.json alongside the timings."""
+BENCH_secure_e2e.json alongside the timings.
+
+``secure.online.<net>.<backend>.b<batch>`` rows time the TAPE-BACKED
+online phase (DESIGN.md §12): the model's MaterialSpec is traced once, a
+MaterialTape is generated offline, and each query consumes a tape slice —
+the compiled online program contains zero PRF work.  The ``.inline``
+sibling times the SAME serving configuration (same net/batch/topology —
+party-only mesh, jnp ring dots so the offline/online split is not
+drowned by interpret-mode Pallas cost on CPU) drawing its randomness
+inline; CI pins online-only strictly below that inline total on the mesh
+backend.  The ``.amortized`` sibling folds the offline plant's per-query
+generation cost back in."""
 from __future__ import annotations
 
 import sys
@@ -36,6 +47,10 @@ CELLS = [("MnistNet1", 8), ("MnistNet1", 32), ("MnistNet3", 4)]
 MODE_CELLS = [("MnistNet1", 8, "arith", ("local",)),
               ("MnistNet1", 8, "wpub", ("local", "mesh")),
               ("MnistNet3", 4, "wpub", ("local",))]
+# offline-plant cells: (net, batch, backends) timed online-only vs a
+# matched inline total, + amortized
+ONLINE_CELLS = [("MnistNet1", 8, ("local", "mesh")),
+                ("MnistNet3", 4, ("local", "mesh"))]
 COMM_NETS = ["MnistNet1", "MnistNet3"]
 QUERIES = 3
 
@@ -86,6 +101,92 @@ def _rows_for(net: str, batch: int, backend: str, mode: str = "binary"):
              f"{led.rounds} rounds")]
 
 
+def _online_rows(net: str, batch: int, backends):
+    """Tape-backed online latency vs a matched inline total (+ amortized
+    incl. tape generation) per backend — the offline-plant rows."""
+    import numpy as np
+    import jax
+    from repro.core import RING32, share
+    from repro.core.preprocessing import (MaterialTape, make_tape_generator,
+                                          tape_session_keys, trace_material)
+    from repro.core.randomness import Parties
+    from repro.core.rss import RSS
+    from repro.core.secure_model import (make_secure_infer_mesh,
+                                         secure_infer)
+    from repro.launch.serve_secure import make_tape_runner
+    from repro.nn.bnn import INPUT_SHAPES
+
+    shape = INPUT_SHAPES[net]
+    # jnp ring dots: the comparison isolates the offline/online split
+    # rather than interpret-mode Pallas kernel cost (CPU CI)
+    model = _compile(net, "binary", use_kernel=False)
+    spec = trace_material(model, (batch,) + shape)
+    gen = make_tape_generator(spec)
+    depth = QUERIES
+
+    rng = np.random.default_rng(0)
+    x = (rng.integers(0, 2, (batch,) + shape).astype(np.float32) - 0.5)
+    xs = share(x, jax.random.PRNGKey(3), RING32)
+    keys = Parties.setup(jax.random.PRNGKey(7)).keys
+    tape = MaterialTape(gen(tape_session_keys(jax.random.PRNGKey(11),
+                                              depth)), spec, depth)
+    jax.block_until_ready(tape.slabs)
+
+    def timed(fn, n=QUERIES):
+        jax.block_until_ready(fn(0))          # compile + warm
+        best = float("inf")
+        for q in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    rows = []
+    for backend in backends:
+        # matched inline runner: same topology as the tape runner
+        # (party-only mesh), drawing its randomness inline
+        if backend == "local":
+            jin = jax.jit(lambda k, xst: secure_infer(
+                model, RSS(xst, model.ring), Parties(k)))
+            run_inline = lambda q: jin(keys, xs.shares)
+        else:
+            mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:3]),
+                                     ("party",))
+            jin = jax.jit(make_secure_infer_mesh(model, mesh))
+            run_inline = lambda q: jin(keys, xs.shares)
+        run, prepare, _ = make_tape_runner(model, spec, backend)
+        # dealer-side staging (slab pairing) happens ahead of the clock,
+        # like serve_pool does per query
+        staged = [prepare(xs.shares, tape.query_slice(q))
+                  for q in range(depth)]
+        jax.block_until_ready(staged)
+        us_online = timed(lambda q: run(keys, staged[q]))
+        us_inline = timed(run_inline)
+
+        # amortized: regenerate the tape (the jitted plant is already
+        # compiled) and serve the same queries from it
+        t0 = time.perf_counter()
+        tape2 = MaterialTape(gen(tape_session_keys(jax.random.PRNGKey(13),
+                                                   depth)), spec, depth)
+        out = None
+        for q in range(QUERIES):
+            out = run(keys, prepare(xs.shares, tape2.query_slice(q)))
+        jax.block_until_ready(out)
+        us_amort = (time.perf_counter() - t0) / QUERIES * 1e6
+
+        ips = batch / (us_online / 1e6)
+        rows.append((f"secure.online.{net}.{backend}.b{batch}", us_online,
+                     f"{ips:.1f} img/s online-only; zero PRF in HLO; "
+                     f"{us_inline / us_online:.2f}x vs inline"))
+        rows.append((f"secure.online.{net}.{backend}.b{batch}.inline",
+                     us_inline,
+                     "matched inline total (same topology, jnp dots)"))
+        rows.append((f"secure.online.{net}.{backend}.b{batch}.amortized",
+                     us_amort,
+                     f"incl. tape generation over depth-{depth} pool"))
+    return rows
+
+
 def _comm_rows(net: str):
     """Per-query online wire KB per deployment mode (batch 1) — the
     binary-domain byte trajectory, machine-readable in the JSON."""
@@ -122,6 +223,9 @@ def secure_e2e():
         for backend in wanted:
             if backend in backends:
                 rows.extend(_rows_for(net, batch, backend, mode))
+    for net, batch, wanted in ONLINE_CELLS:
+        rows.extend(_online_rows(net, batch,
+                                 [b for b in wanted if b in backends]))
     for net in COMM_NETS:
         rows.extend(_comm_rows(net))
     return rows

@@ -3,6 +3,9 @@ from .ring import RingSpec, RING32, RING64, default_ring
 from .rss import (RSS, BinRSS, share, reconstruct, share_bits,
                   reconstruct_bits, public_rss)
 from .randomness import Parties
+from .preprocessing import (MaterialSpec, MaterialTape, TapeParties,
+                            trace_material, generate_tape,
+                            tape_session_keys)
 from .transport import (LocalTransport, MeshTransport, use_transport,
                         current as current_transport)
 from .ot import ot3

@@ -39,7 +39,7 @@ from .linear import mul, mul_open, reveal, fused_rounds
 from .ot import ot3
 from .randomness import Parties
 from .ring import RingSpec
-from .rss import RSS, BinRSS, PARTIES, public_rss
+from .rss import RSS, BinRSS, PARTIES
 
 __all__ = ["b2a", "msb_extract", "msb_extract_arith", "a2b_msb",
            "DEFAULT_BOUND_BITS"]
@@ -91,16 +91,11 @@ def _msb_core(x: RSS, parties: Parties, bound_bits: int, tag: str):
     if r_bits < 1:
         raise ValueError(f"bound_bits={bound_bits} too large for l={ring.bits}")
 
-    # ---- offline (input independent) ------------------------------------
-    with comm.preprocessing():
-        beta = parties.rand_bits(shape)                     # [β]^B
-        beta_a = b2a(beta, parties, ring, tag=tag + ".b2a")  # [β]^A
-        r = parties.rand_rss(shape, ring, max_bits=r_bits)  # bounded positive
-        r = r.mul_public_int(2).add_public(jnp.asarray(1, ring.dtype))  # odd
-        # ρ = (-1)^β · r = (1 - 2β) · r : one offline secure mult.
-        one_minus_2b = (public_rss(jnp.asarray(1, ring.dtype), shape, ring)
-                        - beta_a.mul_public_int(jnp.asarray(2, ring.dtype)))
-        rho = mul(one_minus_2b, r, parties, tag=tag + ".rho")
+    # ---- offline (input independent): one overridable draw point --------
+    # Inline Parties run the real sub-protocols here (B2A OT + ρ mult,
+    # metered as preprocessing); TapeParties hand back tape slices so the
+    # online program carries none of it (core/preprocessing.py).
+    beta, beta_a, rho = parties.msb_material(shape, ring, r_bits, tag=tag)
 
     # ---- online ---------------------------------------------------------
     y = x.mul_public_int(2).add_public(jnp.asarray(1, ring.dtype))  # 2x+1, odd

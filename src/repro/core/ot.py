@@ -65,12 +65,11 @@ def ot3(m0, m1, choice_shares, choice_slot: int | None = None, *,
     else:
         cb = jnp.asarray(t.slot_view(choice_shares, choice_slot), jnp.uint8)
 
-    # Step 1: sender & receiver derive common masks from their shared PRF key.
+    # Step 1: sender & receiver derive common masks from their shared PRF
+    # key — an overridable draw point, so tape-backed Parties can serve the
+    # (input-independent) masks from preprocessing material.
     kidx = pair_key_index(sender, receiver)
-    cnt = parties._next()
-    from .randomness import _prf_bits
-    mask0 = _prf_bits(parties.keys[kidx], cnt, m0.shape, ring)
-    mask1 = _prf_bits(parties.keys[kidx], cnt + 100003, m1.shape, ring)
+    mask0, mask1 = parties.ot_masks(kidx, m0.shape, ring)
 
     # Step 2-3: sender masks and sends (s0, s1) to helper.
     s0 = t.send(m0 ^ mask0, sender, helper)

@@ -41,14 +41,40 @@ class Parties:
     Python int advanced at trace time — every protocol invocation inside one
     traced program draws distinct randomness; per-call freshness across jit
     invocations comes from passing a fresh ``session_key``.
+
+    Because the counter is trace-time Python state shared by every trace
+    that closes over the same object, program entry points call
+    :meth:`fresh` so each trace starts from the construction-time base —
+    otherwise a jit *retrace* (new batch shape) would silently continue the
+    previous trace's sequence and desynchronize from any
+    :class:`~repro.core.preprocessing.MaterialSpec` traced earlier
+    (pinned by tests/test_preprocessing.py).
+
+    The flip side of that determinism is a one-invocation contract: Python
+    state cannot distinguish "second ``secure_infer`` in the same traced
+    program" from "retrace of the first", so composing several top-level
+    protocol programs over the SAME Parties inside one trace would reuse
+    the stream (identical pads across the two inferences).  Derive one
+    Parties per program from independent session keys instead
+    (``Parties.setup(jax.random.fold_in(session, i))``) — the same rule
+    that already governs freshness across jit invocations.
     """
 
     keys: jax.Array  # (3,) PRNG keys
     _cnt: int = 0
 
+    def __post_init__(self):
+        self._base = self._cnt
+
     @classmethod
     def setup(cls, session_key) -> "Parties":
         return cls(jax.random.split(session_key, PARTIES))
+
+    def fresh(self) -> "Parties":
+        """A view whose counter is reset to the construction-time base, so
+        every trace of the same program consumes the identical counter
+        sequence (cross-invocation freshness stays with ``session_key``)."""
+        return Parties(self.keys, self._base)
 
     def _next(self) -> int:
         self._cnt += 1
@@ -130,3 +156,41 @@ class Parties:
         cnt = self._next()
         return (_prf_bits(self.keys[i], cnt, shape, ring)
                 + _prf_bits(self.keys[(i + 1) % PARTIES], cnt, shape, ring))
+
+    # -- protocol material (overridable draw points) ----------------------
+    def ot_masks(self, kidx: int, shape, ring: RingSpec | None = None):
+        """The (mask0, mask1) pair of one 3-party OT invocation, derived
+        from the sender/receiver common key ``keys[kidx]`` (Alg 1 step 1).
+        One counter tick; the second mask uses a large fixed offset so the
+        two streams never collide."""
+        ring = ring or default_ring()
+        cnt = self._next()
+        return (_prf_bits(self.keys[kidx], cnt, shape, ring),
+                _prf_bits(self.keys[kidx], cnt + 100003, shape, ring))
+
+    def msb_material(self, shape, ring: RingSpec, r_bits: int,
+                     tag: str = "msb"):
+        """Input-independent material of one MSB extraction (Alg 3 offline):
+        ``([β]^B, [β]^A, [ρ])`` with ρ = (−1)^β·r for a positive odd r <
+        2^{r_bits+1}.  Inline this runs the real offline sub-protocols (the
+        B2A OT conversion + one secure mult) under ``comm.preprocessing()``;
+        :class:`~repro.core.preprocessing.TapeParties` overrides it to hand
+        back precomputed tape slices so none of this work — PRFs, the OT,
+        the ρ mult — appears in the online program."""
+        from . import comm
+        from .linear import mul
+        from .msb import b2a
+        from .rss import public_rss
+
+        with comm.preprocessing():
+            beta = self.rand_bits(shape)                          # [β]^B
+            beta_a = b2a(beta, self, ring, tag=tag + ".b2a")      # [β]^A
+            r = self.rand_rss(shape, ring, max_bits=r_bits)       # bounded +
+            r = r.mul_public_int(2).add_public(jnp.asarray(1, ring.dtype))
+            # ρ = (-1)^β · r = (1 - 2β) · r : one offline secure mult.
+            one_minus_2b = (public_rss(jnp.asarray(1, ring.dtype), shape,
+                                       ring)
+                            - beta_a.mul_public_int(
+                                jnp.asarray(2, ring.dtype)))
+            rho = mul(one_minus_2b, r, self, tag=tag + ".rho")
+        return beta, beta_a, rho

@@ -358,6 +358,12 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
     non-depthwise linear through the fused 3-party Pallas kernel with the
     cached weight limbs.  Each linear layer runs the path the compiler
     assigned it (arith / bin-shared / bin-public — DESIGN.md §11)."""
+    # every trace starts from the counter base, so jit retraces (and tape
+    # playback, DESIGN.md §12) consume identical draw sequences — pinned by
+    # tests/test_preprocessing.py::test_retrace_counter_sequence.  Corollary
+    # (see Parties): one secure_infer per Parties per traced program —
+    # derive per-inference Parties from separate session keys to compose.
+    parties = parties.fresh()
     ring = model.ring
     h = x_shares
     prev_sign = False  # is the current activation ±1-integer valued?
@@ -525,7 +531,8 @@ def _split_arrays(tree):
 def make_secure_infer_mesh(model: SecureModel, mesh, *,
                            party_axis: str = "party",
                            batch_axis: str | None = None,
-                           reveal_output: bool = True):
+                           reveal_output: bool = True,
+                           tape_spec=None):
     """Build a jit-able mesh-backend runner for ``secure_infer``.
 
     Returns ``fn(keys, x_stack) -> (3, B, classes)`` where ``x_stack`` is
@@ -544,29 +551,50 @@ def make_secure_infer_mesh(model: SecureModel, mesh, *,
     (identical shapes ⇒ identical PRF streams); with a sharded batch the
     per-shard PRF draws differ from the full-batch sim, so the exact
     truncation's ±ulp noise may differ (values still agree to a few ulp;
-    Sign decisions are unaffected outside ulp-sized margins)."""
+    Sign decisions are unaffected outside ulp-sized margins).
+
+    ``tape_spec`` (a :class:`~repro.core.preprocessing.MaterialSpec`)
+    switches the runner to the tape-backed online phase (DESIGN.md §12):
+    the returned ``fn(keys, x_stack, slabs)`` consumes one query's
+    material slice instead of computing PRFs — party-stacked slabs enter
+    pre-paired like the model shares (own + rolled, ``ingest``), parts
+    slabs shard to their own row, key-replicated slabs stay whole.  The
+    material is traced at the full query batch, so it composes with the
+    party axis only (no ``batch_axis``)."""
     from jax.sharding import PartitionSpec as P
 
     assert mesh.shape[party_axis] == 3, \
         f"mesh axis {party_axis!r} must have size 3"
+    assert tape_spec is None or batch_axis is None, \
+        "tape playback is traced at the global batch — party-only mesh"
     arrays, pub_arrays, rebuild = _split_arrays(model.ops)
     for a in arrays:
         assert int(a.shape[0]) == 3, f"expected party-stacked array: {a.shape}"
 
+    from .preprocessing import REPLICATED, STACK_PAIR, TapeParties
     x_spec = P(party_axis, batch_axis)
     w_spec = P(party_axis)
     n_arr = len(arrays)
     # public (pub_*) tensors are replicated: every party holds the clear
-    # model, so their in_spec carries no party axis (bin-public path)
+    # model, so their in_spec carries no party axis (bin-public path);
+    # tape slab dicts take pytree-prefix specs (party-sharded stacks,
+    # replicated key-derived masks)
     in_specs = (P(), x_spec, x_spec, (w_spec,) * n_arr, (w_spec,) * n_arr,
-                (P(),) * len(pub_arrays))
+                (P(),) * len(pub_arrays), w_spec, w_spec, w_spec, P())
     out_specs = P(party_axis, batch_axis)
     cnt0 = 0
 
-    def inner(keys, x_own, x_nxt, arrs_own, arrs_nxt, pub_arrs):
+    def inner(keys, x_own, x_nxt, arrs_own, arrs_nxt, pub_arrs,
+              tp_own, tp_nxt, tp_parts, tp_repl):
         t = transport.MeshTransport(party_axis)
         with transport.use_transport(t):
-            prt = Parties(keys, cnt0)
+            if tape_spec is not None:
+                slabs = {k: t.ingest(tp_own[k], tp_nxt[k]) for k in tp_own}
+                slabs.update(tp_parts)
+                slabs.update(tp_repl)
+                prt = TapeParties(keys, slabs, tape_spec)
+            else:
+                prt = Parties(keys, cnt0)
             ops = rebuild([t.ingest(o, n) for o, n in zip(arrs_own,
                                                           arrs_nxt)],
                           pub_arrs)
@@ -589,11 +617,34 @@ def make_secure_infer_mesh(model: SecureModel, mesh, *,
 
     arrs_nxt = tuple(roll(a) for a in arrays)
 
-    def fn(keys, x_stack):
-        return sm(keys, x_stack, roll(x_stack), arrays, arrs_nxt,
-                  pub_arrays)
+    if tape_spec is None:
+        def fn(keys, x_stack):
+            return sm(keys, x_stack, roll(x_stack), arrays, arrs_nxt,
+                      pub_arrays, {}, {}, {}, {})
+        return fn
 
-    return fn
+    layout = {k: v.layout for k, v in tape_spec.slabs.items()}
+
+    def prepare(x_stack, slabs):
+        """Dealer-side pairing for one query, OUTSIDE the online program:
+        build the rolled (next-share) copies of the input stack and the
+        pair-layout slabs eagerly so the compiled online HLO contains only
+        the protocol's own collectives (the exact online-row cross-check
+        of roofline.analyze.ledger_vs_wire)."""
+        pair = {k: v for k, v in slabs.items() if layout[k] == STACK_PAIR}
+        parts = {k: v for k, v in slabs.items()
+                 if layout[k] not in (STACK_PAIR, REPLICATED)}
+        repl = {k: v for k, v in slabs.items() if layout[k] == REPLICATED}
+        return (x_stack, roll(x_stack), pair,
+                {k: roll(v) for k, v in pair.items()}, parts, repl)
+
+    def fn_tape(keys, prepared):
+        x_own, x_nxt, pair, pair_nxt, parts, repl = prepared
+        return sm(keys, x_own, x_nxt, arrays, arrs_nxt, pub_arrays,
+                  pair, pair_nxt, parts, repl)
+
+    fn_tape.prepare = prepare
+    return fn_tape
 
 
 def secure_infer_mesh(model: SecureModel, x_shares: RSS, parties: Parties,

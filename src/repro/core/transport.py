@@ -45,6 +45,15 @@ Layouts (leading axis = party):
   additive parts (3, *s) z_i      (1, *s)  [z_i]
   plain value    (*s) global      (*s) valid on the parties that know it
   =============  ===============  =====================================
+
+The ``prf_*`` primitives lay PRF-correlated randomness out per party for
+the *inline* drawing mode.  The offline preprocessing plant
+(core/preprocessing.py, DESIGN.md §12) precomputes the same material into
+MaterialTape slabs that mirror these layouts slab-for-slab — RSS-layout
+slabs enter a mesh program pre-paired via :meth:`ingest` exactly like
+model shares, parts-layout slabs shard to their own row — so a
+tape-backed online program touches the transport only through its data
+movement primitives and compiles with zero PRF work.
 """
 from __future__ import annotations
 

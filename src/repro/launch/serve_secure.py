@@ -21,11 +21,23 @@ runs the full CBNN protocol stack under either transport backend:
     share algebra (zero wire bytes on post-Sign layers) and the kernel
     uses the adaptive public limb collapse.
 
-Reports throughput plus the per-query CommLedger and its modeled LAN/WAN
-wall-clock.
+``--offline`` selects the preprocessing phase (DESIGN.md §12):
+
+  * ``inline`` (default) — correlated randomness (PRF zero shares, trunc
+    pads, MSB material, OT masks) is drawn inside the online query.
+  * ``pool`` — the offline plant: the model's MaterialSpec is traced
+    once, a double-buffered pool of ``--pool-depth`` consumable
+    MaterialTapes is generated ahead of traffic (one jitted launch per
+    refill, dispatched while online batches run), and every query
+    consumes a tape slice — the compiled online program contains ZERO
+    PRF work, so online-only latency drops below the inline total.
+
+Reports throughput (online-only vs amortized-total under ``pool``) plus
+the per-query CommLedger and its modeled LAN/WAN wall-clock, total and
+online-only.
 
   PYTHONPATH=src python -m repro.launch.serve_secure --net MnistNet1 \
-      --backend mesh --batch 32 --queries 4 --weights public
+      --backend mesh --batch 32 --queries 4 --offline pool --pool-depth 8
 """
 import argparse
 import json
@@ -78,6 +90,74 @@ def make_runner(model, backend: str, batch: int, party_axis: str = "party"):
     return (lambda keys, x_stack: jitted(keys, x_stack)[0]), mesh
 
 
+def make_tape_runner(model, spec, backend: str, party_axis: str = "party"):
+    """Compile-once ONLINE phase for a MaterialTape (DESIGN.md §12),
+    returned as ``(run, prepare, mesh)``: ``prepare(x_stack, slabs)`` is
+    the dealer-side staging (under ``mesh`` it builds the pre-paired slab
+    copies — offline-phase work, outside the compiled online program and
+    outside online timing) and ``run(keys, prepared) -> logits`` is the
+    PRF-free online step."""
+    import jax
+    import numpy as np
+    from repro.core.preprocessing import make_tape_infer
+    from repro.core.secure_model import make_secure_infer_mesh
+
+    if backend == "local":
+        jitted = jax.jit(make_tape_infer(model, spec))
+        return (lambda keys, prepared: jitted(keys, *prepared),
+                lambda x_stack, slabs: (x_stack, slabs), None)
+    n_dev = len(jax.devices())
+    if n_dev < 3:
+        raise SystemExit(f"mesh backend needs >= 3 devices, have {n_dev} "
+                         "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    # tape material is traced at the global batch: party-only mesh
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:3]), (party_axis,))
+    fn = make_secure_infer_mesh(model, mesh, tape_spec=spec)
+    jitted = jax.jit(fn)
+    return (lambda keys, prepared: jitted(keys, prepared)[0],
+            fn.prepare, mesh)
+
+
+def serve_pool(run, prepare, gen, spec, keys, xs_shares, queries: int,
+               depth: int, master_key):
+    """Double-buffered tape pool: consume ``depth``-slot tapes while the
+    next refill is already dispatched (JAX async dispatch overlaps it with
+    the online batches).  Per query, the dealer-side ``prepare`` staging
+    runs outside the online timer.  Returns (outputs, online_s, total_s,
+    refills)."""
+    import jax
+    from repro.core.preprocessing import MaterialTape, tape_session_keys
+
+    def buf_keys(i):
+        return tape_session_keys(jax.random.fold_in(master_key, i), depth)
+
+    cur = MaterialTape(gen(buf_keys(0)), spec, depth)
+    nxt = MaterialTape(gen(buf_keys(1)), spec, depth)
+    # warm the online compile outside the timed loop
+    jax.block_until_ready(run(keys, prepare(xs_shares,
+                                            cur.query_slice(0))))
+
+    out = None
+    slot, buf_i, refills = 1, 1, 0   # slot 0 was consumed by the warm-up
+    online_s = 0.0
+    t0 = time.perf_counter()
+    for _ in range(queries):
+        if slot == depth:              # buffer exhausted: swap + refill
+            cur, slot = nxt, 0
+            buf_i += 1
+            refills += 1
+            nxt = MaterialTape(gen(buf_keys(buf_i)), spec, depth)
+        prepared = prepare(xs_shares, cur.query_slice(slot))
+        jax.block_until_ready(prepared)   # staging done before the clock
+        slot += 1
+        t1 = time.perf_counter()
+        out = run(keys, prepared)
+        jax.block_until_ready(out)
+        online_s += time.perf_counter() - t1
+    total_s = time.perf_counter() - t0
+    return out, online_s, total_s, refills
+
+
 def main():
     # only the CLI mutates the env (importing this module must not); the
     # flag works only before jax initializes
@@ -102,6 +182,16 @@ def main():
                     help="post-Sign linear routing (DESIGN.md §11): the "
                          "binary-domain engine, the generic Alg-2 "
                          "reference, or the binarization-unaware ablation")
+    ap.add_argument("--offline", choices=("inline", "pool"),
+                    default="inline",
+                    help="preprocessing phase (DESIGN.md §12): draw "
+                         "correlated randomness inside the online query, "
+                         "or serve from a double-buffered MaterialTape "
+                         "pool generated ahead of traffic")
+    ap.add_argument("--pool-depth", type=int, default=8, metavar="K",
+                    help="queries of material per tape buffer (pool mode)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the query generator and sharing keys")
     ap.add_argument("--json", default="", metavar="PATH")
     args = ap.parse_args()
 
@@ -115,44 +205,88 @@ def main():
     shape = INPUT_SHAPES[args.net]
     model = build(args.net, not args.no_kernel, args.weights,
                   args.binary_linear)
-    run, mesh = make_runner(model, args.backend, args.batch)
-    if mesh is not None:
-        print(f"[serve_secure] mesh axes "
-              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     led = secure_infer_cost(model, (args.batch,) + shape)
-    parties = Parties.setup(jax.random.PRNGKey(7))
+    parties = Parties.setup(jax.random.PRNGKey(args.seed + 7))
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     x = (rng.integers(0, 2, (args.batch,) + shape).astype(np.float32) - 0.5)
-    xs = share(x, jax.random.PRNGKey(3), RING32)
+    xs = share(x, jax.random.PRNGKey(args.seed + 3), RING32)
 
-    out = np.asarray(run(parties.keys, xs.shares))  # compile + warm
-    assert out.shape[0] == args.batch
+    stats = {"net": args.net, "backend": args.backend, "batch": args.batch,
+             "weights": args.weights, "offline": args.offline,
+             "comm_mb_per_query": led.megabytes, "rounds": led.rounds}
 
-    t0 = time.time()
-    for q in range(args.queries):
-        out = run(parties.keys, xs.shares)
-    np.asarray(out)
-    dt = time.time() - t0
-    qps = args.queries / dt
-    ips = qps * args.batch
+    if args.offline == "pool":
+        from repro.core.preprocessing import (make_tape_generator,
+                                              trace_material)
+        if args.pool_depth < 1:
+            ap.error("--pool-depth must be >= 1")
+        spec = trace_material(model, (args.batch,) + shape)
+        print(f"[serve_secure] material spec: {spec.summary()}")
+        gen = make_tape_generator(spec)
+        run, prepare, mesh = make_tape_runner(model, spec, args.backend)
+        if mesh is not None:
+            print(f"[serve_secure] mesh axes "
+                  f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+        out, online_s, total_s, refills = serve_pool(
+            run, prepare, gen, spec, parties.keys, xs.shares, args.queries,
+            args.pool_depth, jax.random.PRNGKey(args.seed + 11))
+        out = np.asarray(out)
+        assert out.shape[0] == args.batch
+        qps_on = args.queries / online_s
+        qps_total = args.queries / total_s
+        print(f"[serve_secure] {args.net} backend={args.backend} "
+              f"batch={args.batch} offline=pool depth={args.pool_depth}: "
+              f"{args.queries} queries, online-only {qps_on:.2f} q/s "
+              f"({qps_on * args.batch:.1f} img/s), amortized total "
+              f"{qps_total:.2f} q/s ({qps_total * args.batch:.1f} img/s, "
+              f"{refills} refills)")
+        stats.update({"pool_depth": args.pool_depth,
+                      "query_per_s_online": qps_on,
+                      "img_per_s_online": qps_on * args.batch,
+                      "query_per_s": qps_total,
+                      "img_per_s": qps_total * args.batch})
+    else:
+        run, mesh = make_runner(model, args.backend, args.batch)
+        if mesh is not None:
+            print(f"[serve_secure] mesh axes "
+                  f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+        out = np.asarray(run(parties.keys, xs.shares))  # compile + warm
+        assert out.shape[0] == args.batch
+        t0 = time.time()
+        for q in range(args.queries):
+            out = run(parties.keys, xs.shares)
+        np.asarray(out)
+        dt = time.time() - t0
+        qps = args.queries / dt
+        ips = qps * args.batch
+        print(f"[serve_secure] {args.net} backend={args.backend} "
+              f"batch={args.batch} kernel={not args.no_kernel} "
+              f"weights={args.weights}: "
+              f"{args.queries} queries in {dt:.2f}s = {qps:.2f} q/s "
+              f"({ips:.1f} img/s)")
+        stats.update({"img_per_s": ips, "query_per_s": qps})
 
-    print(f"[serve_secure] {args.net} backend={args.backend} "
-          f"batch={args.batch} kernel={not args.no_kernel} "
-          f"weights={args.weights}: "
-          f"{args.queries} queries in {dt:.2f}s = {qps:.2f} q/s "
-          f"({ips:.1f} img/s)")
+    # modeled network wall-clock: total (online + preprocessing) next to
+    # the online-only phase the tape pool leaves on the wire
     print(f"[serve_secure] per-query comm: {led.megabytes:.3f} MB online "
-          f"({led.rounds} rounds), modeled LAN {led.time(comm.LAN)*1e3:.1f} ms"
-          f" / WAN {led.time(comm.WAN)*1e3:.0f} ms")
+          f"({led.rounds} rounds) + {led.pre_nbytes / 1e6:.3f} MB offline "
+          f"({led.pre_rounds} rounds)")
+    print(f"[serve_secure] modeled total   LAN "
+          f"{led.time(comm.LAN, online_only=False)*1e3:.1f} ms / WAN "
+          f"{led.time(comm.WAN, online_only=False)*1e3:.0f} ms")
+    print(f"[serve_secure] modeled online  LAN "
+          f"{led.time(comm.LAN, online_only=True)*1e3:.1f} ms / WAN "
+          f"{led.time(comm.WAN, online_only=True)*1e3:.0f} ms")
+    stats.update({
+        "lan_ms_total": led.time(comm.LAN, online_only=False) * 1e3,
+        "wan_ms_total": led.time(comm.WAN, online_only=False) * 1e3,
+        "lan_ms_online": led.time(comm.LAN, online_only=True) * 1e3,
+        "wan_ms_online": led.time(comm.WAN, online_only=True) * 1e3})
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"net": args.net, "backend": args.backend,
-                       "batch": args.batch, "weights": args.weights,
-                       "img_per_s": ips, "query_per_s": qps,
-                       "comm_mb_per_query": led.megabytes,
-                       "rounds": led.rounds}, f, indent=2)
+            json.dump(stats, f, indent=2)
         print(f"[serve_secure] wrote {args.json}")
 
 

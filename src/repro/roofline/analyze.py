@@ -252,15 +252,40 @@ def party_wire_bytes_from_hlo(hlo_text: str) -> dict:
     return out
 
 
+# Markers of PRF work in a compiled module: the Threefry-2x32 key-schedule
+# constant 0x1BD11BDA (survives every XLA optimization pass as a literal),
+# plus the symbolic names some backends keep for the generator.
+PRF_HLO_MARKERS = ("466688986", "threefry", "rng-bit-generator")
+
+
+def prf_ops_in_hlo(hlo_text: str) -> int:
+    """Count PRF evidence in a compiled HLO module.  A tape-backed online
+    program (DESIGN.md §12) must return 0 — all correlated randomness was
+    moved to the offline MaterialTape; the inline program returns one hit
+    per fused Threefry key schedule."""
+    return sum(hlo_text.count(m) for m in PRF_HLO_MARKERS)
+
+
 def ledger_vs_wire(hlo_text: str, ledger_bytes: int,
                    data_replicas: int = 1) -> dict:
     """Cross-check a CommLedger byte total against the physical wire bytes
-    of a compiled per-party SPMD program (DESIGN.md §1/§11).
+    of a compiled per-party SPMD program (DESIGN.md §1/§11/§12).
 
-    ``ledger_bytes`` is the traced (online + offline) protocol total for
-    ONE data replica; on a composed party×data mesh pass the data-axis
-    size so the per-shard ledger scales to the wire sum of every replica's
-    rings/gathers.  Returns {wire_bytes, ledger_bytes, rel_diff, counts}.
+    ``ledger_bytes`` is the traced protocol total for ONE data replica; on
+    a composed party×data mesh pass the data-axis size so the per-shard
+    ledger scales to the wire sum of every replica's rings/gathers.
+    Returns {wire_bytes, ledger_bytes, rel_diff, counts, prf_ops}.
+
+    Two calling conventions, matching the two serving phases:
+
+      * inline program — pass the ledger's online + offline total
+        (``led.nbytes + led.pre_nbytes``): the offline sub-protocols (B2A
+        OT, ρ mult) compile into the same module.
+      * tape-backed online program — pass the ONLINE total (``led.nbytes``
+        from ``preprocessing.online_cost``): the compiled module must hold
+        exactly the online rows' collectives and zero PRF work
+        (``prf_ops == 0``) — the online-only cross-check pinned by
+        tests/test_preprocessing_mesh.py.
 
     Holds for every linear-engine path: the arith/bin-shared openings and
     reshares appear as all-gathers/ppermutes byte-for-byte, and a
@@ -274,7 +299,8 @@ def ledger_vs_wire(hlo_text: str, ledger_bytes: int,
     return {"wire_bytes": wire["total_bytes"], "ledger_bytes": total,
             "rel_diff": diff,
             "counts": {k: v["count"] for k, v in wire.items()
-                       if isinstance(v, dict)}}
+                       if isinstance(v, dict)},
+            "prf_ops": prf_ops_in_hlo(hlo_text)}
 
 
 def summarize_memory(mem) -> dict:

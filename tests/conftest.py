@@ -1,3 +1,8 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
 import jax
 import pytest
 
@@ -17,3 +22,20 @@ def parties():
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)
+
+
+def run_party_subprocess(script_text: str, tmp_path, name: str):
+    """Run a mesh-backend test script in a subprocess with 8 fake host
+    devices (the fake-device XLA flag must be set before jax initializes,
+    and the main test session must keep seeing 1 device).  Shared by the
+    transport/preprocessing/OT mesh tests."""
+    script = tmp_path / name
+    script.write_text(script_text)
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, timeout=900, env=env, cwd=str(repo))
+    assert r.returncode == 0 and "OK" in r.stdout, \
+        f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"

@@ -1,0 +1,79 @@
+"""Offline preprocessing plant under MeshTransport (DESIGN.md §12):
+tape playback bit-identity per party program, and the online-only
+cross-check — the compiled online per-party HLO holds exactly the
+CommLedger's online rows as collectives and zero PRF work.
+
+Runs in a subprocess with 8 fake host devices (same pattern as
+test_transport_mesh.py)."""
+from conftest import run_party_subprocess
+
+TAPE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import RING32, Parties, share
+from repro.core import preprocessing as prep
+from repro.core.secure_model import (compile_secure, secure_infer,
+                                     make_secure_infer_mesh)
+from repro.nn import bnn
+from repro.nn.bnn import INPUT_SHAPES
+from repro.roofline.analyze import ledger_vs_wire
+
+mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:3]), ("party",))
+
+
+def run_case(net, batch, check_wire=False, **compile_kw):
+    shape = INPUT_SHAPES[net]
+    params = bnn.init_bnn(jax.random.PRNGKey(0), net)
+    model = compile_secure(params, net, jax.random.PRNGKey(1), RING32,
+                           **compile_kw)
+    x = (np.random.default_rng(1).integers(0, 2, (batch,) + shape)
+         .astype(np.float32) - 0.5)
+    xs = share(x, jax.random.PRNGKey(4), RING32)
+    keys = Parties.setup(jax.random.PRNGKey(7)).keys
+
+    ref = np.asarray(secure_infer(model, xs, Parties(keys)))
+    spec = prep.trace_material(model, (batch,) + shape)
+    tape = prep.generate_tape(spec, keys[None])
+
+    fn = make_secure_infer_mesh(model, mesh, tape_spec=spec)
+    jfn = jax.jit(fn)
+    prepared = fn.prepare(xs.shares, tape.query_slice(0))
+    out = np.asarray(jfn(keys, prepared))[0]
+    assert np.array_equal(ref, out), (net, compile_kw,
+                                      np.abs(ref - out).max())
+
+    if check_wire:
+        # online-only cross-check: the compiled per-party online program
+        # carries exactly the ledger's ONLINE rows as collectives and
+        # zero PRF work (the offline plant absorbed the rest)
+        led = prep.online_cost(model, spec, (batch,) + shape)
+        hlo = jfn.lower(keys, prepared).compile().as_text()
+        chk = ledger_vs_wire(hlo, led.nbytes)
+        assert chk["prf_ops"] == 0, chk
+        assert chk["rel_diff"] == 0.0, chk
+        assert chk["wire_bytes"] == led.nbytes > 0, chk
+        print("wire:", net, compile_kw, chk)
+    print("tape case OK:", net, compile_kw)
+
+
+# fc + conv nets, shared and public weights — tape playback is
+# bit-identical to inline PRF inference per party program
+run_case("MnistNet1", 2, check_wire=True)
+run_case("MnistNet1", 2, check_wire=True, weights="public")
+run_case("MnistNet3", 2, check_wire=True)
+run_case("MnistNet3", 2, weights="public")
+run_case("MnistNet1", 2, binary_linear="off")
+print("OK")
+"""
+
+
+def test_mesh_tape_bit_identical_and_online_wire(tmp_path):
+    """MeshTransport tape playback == inline LocalTransport inference bit
+    for bit (fc + conv, shared + public weights), and the compiled online
+    HLO's party collectives equal the online ledger rows exactly with
+    zero PRF ops."""
+    run_party_subprocess(TAPE_SCRIPT, tmp_path, "mesh_tape.py")

@@ -4,10 +4,7 @@ matches the compiled per-party HLO's collective wire bytes.
 Both tests run in a subprocess with 8 fake host devices (the fake-device
 XLA flag must be set before jax initializes, and the main test session must
 keep seeing 1 device — same pattern as test_moe_shardmap)."""
-import os
-import subprocess
-import sys
-from pathlib import Path
+from conftest import run_party_subprocess
 
 EQUIV_SCRIPT = r"""
 import os
@@ -239,27 +236,14 @@ print("OK")
 """
 
 
-def _run(script_text, tmp_path, name):
-    script = tmp_path / name
-    script.write_text(script_text)
-    repo = Path(__file__).resolve().parent.parent
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(repo / "src")
-    env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, str(script)], capture_output=True,
-                       text=True, timeout=900, env=env, cwd=str(repo))
-    assert r.returncode == 0 and "OK" in r.stdout, \
-        f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"
-
-
 def test_mesh_backend_bit_identical(tmp_path):
     """secure_infer under MeshTransport == LocalTransport, bit for bit,
     on an fc net and conv nets, fused + paper rounds, kernel + jnp dots,
     with and without a composed data axis."""
-    _run(EQUIV_SCRIPT, tmp_path, "mesh_equiv.py")
+    run_party_subprocess(EQUIV_SCRIPT, tmp_path, "mesh_equiv.py")
 
 
 def test_mesh_ledger_matches_hlo_collectives(tmp_path):
     """CommLedger bytes == physical wire bytes of the ppermute/all_gather
     collectives in the compiled per-party HLO of one secure FFN layer."""
-    _run(LEDGER_SCRIPT, tmp_path, "mesh_ledger.py")
+    run_party_subprocess(LEDGER_SCRIPT, tmp_path, "mesh_ledger.py")
