@@ -1,15 +1,26 @@
-"""Benchmarks mirroring the paper's tables.
+"""Benchmarks mirroring the paper's tables, audited against the live
+runtime (transport backends + §11 path taxonomy, DESIGN.md §13).
 
-Table 1 — MNIST nets (MnistNet1-3): secure-inference time (LAN/WAN network
-model) + communication MB.  Comm/rounds are architecture-determined, so they
-reproduce the paper's columns without trained weights; accuracy columns need
-the (synthetic-data) training pass in examples/distill_cbnn.py and are
-reported there (offline container ⇒ no true MNIST; DESIGN.md §9).
+Table 1 — MNIST nets (MnistNet1-3, + the separable MnistNet3-sep variant
+with its depthwise rows): secure-inference time (LAN/WAN network model) +
+communication MB.  Comm/rounds are architecture-determined, so they
+reproduce the paper's columns without trained weights; accuracy columns
+come from the (synthetic-data) customization pipeline —
+``examples/distill_cbnn.py`` / BENCH_pareto.json (offline container ⇒ no
+true MNIST; DESIGN.md §9).
 
 Table 2 — CifarNet2: typical BNN vs MPC-friendly customized BNN (separable
-convs): params, comm, modeled time.
+convs): params, comm, modeled time, and the per-path byte split.
 
 Table 3 — CIFAR-10 CifarNet2 under CBNN (our framework's row).
+
+Every per-path byte split reported here is derived from the live
+`CommLedger` and cross-checked to sum back to the ledger total — the same
+gate `scripts/gen_protocol_table.py --check` applies to DESIGN.md §11.
+Timings measure the compile-once jitted runner from
+`repro.launch.serve_secure.make_runner` (LocalTransport backend), i.e. the
+online path the serving launcher actually executes — not an eager
+re-trace.
 """
 from __future__ import annotations
 
@@ -19,8 +30,8 @@ import jax
 import numpy as np
 
 from repro.core import LAN, RING32, WAN, Parties, share
-from repro.core.secure_model import (compile_secure, secure_infer,
-                                     secure_infer_cost)
+from repro.core.secure_model import compile_secure, secure_infer_cost
+from repro.launch.serve_secure import make_runner
 from repro.nn import bnn
 
 
@@ -31,15 +42,56 @@ def _model(net: str):
 
 
 def _query_seconds(model, shape, iters: int = 2) -> float:
+    """Wall-clock of the COMPILED online query (serve_secure's
+    compile-once jitted runner) — the pre-transport version of this helper
+    re-traced `secure_infer` eagerly per call, timing tracing overhead
+    instead of the online phase BENCH_secure_e2e.json reports."""
     parties = Parties.setup(jax.random.PRNGKey(2))
     x = np.random.default_rng(0).normal(0, 0.5, (1,) + shape).astype(np.float32)
     xs = share(x, jax.random.PRNGKey(3), RING32)
-    out = secure_infer(model, xs, parties)  # warm (traced eagerly)
-    np.asarray(out)
+    run, _ = make_runner(model, "local", batch=1)
+    np.asarray(run(parties.keys, xs.shares))   # compile + warm
     t0 = time.perf_counter()
+    out = None
     for _ in range(iters):
-        np.asarray(secure_infer(model, xs, parties))
+        out = run(parties.keys, xs.shares)
+    np.asarray(out)
     return (time.perf_counter() - t0) / iters
+
+
+def _path_breakdown(model, led):
+    """Online bytes per §11 taxonomy path, from the live CommLedger.
+
+    Uses the compiler's own ``path`` labels (sepconv ops carry a
+    (depthwise, pointwise) pair; a ``dw``-tagged ledger entry bills the
+    depthwise half).  The split is cross-checked to sum back to the
+    ledger's online total — a drifted table fails loudly here rather than
+    publishing stale numbers."""
+    linear = {i: op["path"] for i, op in enumerate(model.ops)
+              if op["op"] in ("conv", "sepconv", "fc")}
+    buckets: dict[str, int] = {}
+    other = 0
+    for tag, (r, b) in led.by_tag.items():
+        if tag.startswith("pre:"):
+            continue
+        head = tag.split(".", 1)[0]
+        if head.startswith("l") and head[1:].isdigit() \
+                and int(head[1:]) in linear:
+            p = linear[int(head[1:])]
+            if isinstance(p, tuple):            # sepconv: (dw, pw) labels
+                p = p[0] if ".dw" in tag else p[1]
+            buckets[p] = buckets.get(p, 0) + b
+        else:
+            other += b
+    assert sum(buckets.values()) + other == led.nbytes, \
+        "per-path split drifted from the CommLedger total"
+    return buckets, other
+
+
+def _paths_str(model, led) -> str:
+    buckets, other = _path_breakdown(model, led)
+    parts = [f"{k}={v / 1e3:.1f}KB" for k, v in sorted(buckets.items())]
+    return " ".join(parts + [f"nonlinear={other / 1e3:.1f}KB"])
 
 
 def table1():
@@ -47,16 +99,18 @@ def table1():
 
     Two rows per net: the paper-faithful protocol stack, and the
     beyond-paper fused-round variant (mul+open / matmul+trunc in one round,
-    EXPERIMENTS.md §Perf cell 3)."""
+    EXPERIMENTS.md §Perf cell 3) — plus a per-§11-path byte-split row.
+    MnistNet3-sep (no paper row) is the separable variant whose depthwise
+    rows the §13 customization pipeline adds."""
     from repro.core.linear import set_fused_rounds
     rows = []
     paper = {"MnistNet1": (0.010, 0.21, 0.010),
              "MnistNet2": (0.010, 0.32, 0.033),
              "MnistNet3": (0.015, 0.97, 0.370)}
-    for net in ("MnistNet1", "MnistNet2", "MnistNet3"):
+    for net in ("MnistNet1", "MnistNet2", "MnistNet3", "MnistNet3-sep"):
         model, _ = _model(net)
         cpu_s = _query_seconds(model, (28, 28, 1))
-        p_lan, p_wan, p_mb = paper[net]
+        pp = paper.get(net)
         for fused in (False, True):
             set_fused_rounds(fused)
             try:
@@ -66,10 +120,16 @@ def table1():
             mb = led.megabytes / 3  # per-party (paper's convention)
             lan, wan = led.time(LAN), led.time(WAN)
             tag = "fused" if fused else "faithful"
+            ref = (f"(paper {pp[2]}) " if pp
+                   else "(separable variant, no paper row) ")
             rows.append((f"table1.{net}.{tag}", cpu_s * 1e6,
-                         f"commMB/party={mb:.3f} (paper {p_mb}) "
-                         f"rounds={led.rounds} LAN={lan:.3f}s (paper {p_lan}) "
-                         f"WAN={wan:.2f}s (paper {p_wan})"))
+                         f"commMB/party={mb:.3f} {ref}"
+                         f"rounds={led.rounds} LAN={lan:.3f}s"
+                         + (f" (paper {pp[0]})" if pp else "")
+                         + f" WAN={wan:.2f}s"
+                         + (f" (paper {pp[1]})" if pp else "")))
+        led = secure_infer_cost(model, (1, 28, 28, 1))
+        rows.append((f"table1.{net}.paths", 0.0, _paths_str(model, led)))
     return rows
 
 
@@ -128,6 +188,11 @@ def table2():
                  f"MACs{100*(c[5]/t[5]-1):+.1f}% "
                  f"comm{100*(c[1]/t[1]-1):+.1f}% (paper -35.8%; see note) "
                  f"WAN{100*(c[3]/t[3]-1):+.1f}% (paper -72.1%)"))
+    # §11 path split of the customized (separable) net — where the
+    # depthwise halves' bytes actually go, from the live ledger
+    model, _ = _model("CifarNet2")
+    led = secure_infer_cost(model, (1, 32, 32, 3))
+    rows.append(("table2.paths.customized", 0.0, _paths_str(model, led)))
     return rows
 
 

@@ -1,0 +1,30 @@
+"""Quick-mode customization-pipeline rows for the benchmark harness.
+
+Runs the distill → binarize → compile_secure pipeline
+(`repro.distill.pipeline`, DESIGN.md §13) at CI speed — 1 epoch on a small
+synthetic subset, the MNIST family only — and emits one
+``secure.pareto.<net>.<mode>`` row per compiled variant.  The full
+frontier across both families (the BENCH_pareto.json artifact) comes from
+``examples/distill_cbnn.py``; these rows keep the pipeline wired into the
+perf trajectory (`--json` diffing) without the training cost.
+"""
+from __future__ import annotations
+
+from repro.distill import run_pipeline
+
+
+def pareto():
+    result = run_pipeline(epochs=1, train_size=768, test_size=256,
+                          secure_eval_size=32, families=("mnist",),
+                          verbose=False)
+    rows = []
+    for r in result["rows"]:
+        sec = (f" secure_acc={r['secure_acc']:.3f}"
+               if r["secure_acc"] is not None else "")
+        rows.append((f"secure.pareto.{r['net']}.{r['mode']}",
+                     r["lan_s"] * 1e6,
+                     f"acc={r['acc']:.3f}{sec} onlineKB={r['online_kb']:.1f} "
+                     f"postsignKB={r['postsign_kb']:.1f} "
+                     f"rounds={r['rounds']} params={r['params']} "
+                     f"conv={r['conv']} pareto={int(r['pareto'])}"))
+    return rows

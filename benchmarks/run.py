@@ -23,7 +23,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: table1,table2,table3,"
-                         "kernels,secure,secure_lm,roofline")
+                         "kernels,secure,secure_lm,roofline,pareto")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write {name: us_per_call} JSON to PATH")
     args = ap.parse_args()
@@ -35,8 +35,8 @@ def main() -> None:
         os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                    + " --xla_force_host_platform_device_count=8")
 
-    from . import (kd_curves, kernel_bench, paper_tables, roofline_report,
-                   secure_e2e, secure_lm)
+    from . import (kd_curves, kernel_bench, paper_tables, pareto,
+                   roofline_report, secure_e2e, secure_lm)
 
     suites = {
         "table1": paper_tables.table1,
@@ -47,6 +47,7 @@ def main() -> None:
         "secure": secure_e2e.secure_e2e,
         "secure_lm": secure_lm.secure_lm,
         "roofline": roofline_report.rows,
+        "pareto": pareto.pareto,
     }
     print("name,us_per_call,derived")
     failures = 0

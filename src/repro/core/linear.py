@@ -304,29 +304,30 @@ def _im2col(x, kh: int, kw: int, stride: int, padding: int):
     return jnp.concatenate(patches, axis=-1), ho, wo
 
 
-def conv2d(x: RSS, w: RSS, parties: Parties, stride: int = 1,
-           padding: int = 0, groups: int = 1, tag: str = "conv",
-           w_limbs=None) -> RSS:
-    """Secure 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin/groups,Cout).
+def _grouped_conv_parts(x: RSS, w: RSS, stride: int, padding: int,
+                        groups: int, w_limbs=None):
+    """Additive per-channel (depthwise) product stack: im2col patches
+    contracted against each channel's own kernel, fused-operand Alg 2.
 
-    ``w_limbs`` holds cached limbs of the (kh·kw·Cin, Cout) weight matrix
-    (groups == 1 only) — the im2col patches then run through the fused
-    3-party kernel."""
+    Returns the (S, B, Ho, Wo, Cout) parts stack — local compute, no comm;
+    callers add bias parts and reshare.  With ``w_limbs`` (a
+    `kernels.bin_rss_matmul.GroupedWeightLimbs` cached at setup) the whole
+    3-party grouped product runs in one Pallas launch instead of the
+    per-party einsum; both paths are exact mod 2^32 (bit-identical)."""
     kh, kw, cin_g, cout = (int(d) for d in w.shape)
-    if groups == 1:
-        cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
-        wmat = w.reshape(kh * kw * cin_g, cout)
-        return matmul(cols, wmat, parties, tag=tag, w_limbs=w_limbs)
-    # Depthwise (groups == Cin, cin_g == 1): per-channel conv, still one
-    # reshare round for the whole layer.
     b = int(x.shape[0])
     cin = int(x.shape[3])
     assert groups == cin and cin_g == 1 and cout % groups == 0
     mult = cout // groups
     cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)  # (...,kh*kw*Cin)
     cols4 = cols.reshape(b, ho, wo, kh * kw, cin)
-    # einsum over the patch dim per channel: out[...,c*mult+m]
     t = transport.current()
+    if w_limbs is not None:
+        from ..kernels.ops import grouped_rss_matmul_op
+        z = grouped_rss_matmul_op(t.own_view(cols4.shares),
+                                  t.next_view(cols4.shares), w_limbs)
+        return z.reshape(z.shape[0], b, ho, wo, cout)
+    # einsum over the patch dim per channel: out[...,c*mult+m]
     slots = t.rss_slots
     ws_full = w.reshape(kh * kw, 1, cout).shares.reshape(slots, kh * kw,
                                                          cin, mult)
@@ -338,7 +339,26 @@ def conv2d(x: RSS, w: RSS, parties: Parties, stride: int = 1,
                           preferred_element_type=x.ring.dtype)
     z = jnp.stack([dw(xo[i], wo_[i] + wn[i]) + dw(xn[i], wo_[i])
                    for i in range(xo.shape[0])])
-    z = z.reshape(z.shape[0], b, ho, wo, cout)
+    return z.reshape(z.shape[0], b, ho, wo, cout)
+
+
+def conv2d(x: RSS, w: RSS, parties: Parties, stride: int = 1,
+           padding: int = 0, groups: int = 1, tag: str = "conv",
+           w_limbs=None) -> RSS:
+    """Secure 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin/groups,Cout).
+
+    ``w_limbs`` holds the setup-time limb cache: a
+    `kernels.rss_matmul.WeightLimbs` of the (kh·kw·Cin, Cout) weight
+    matrix (groups == 1), or a `GroupedWeightLimbs` for the depthwise case
+    (groups == Cin) — either way the im2col patches run through the fused
+    3-party kernel.  Depthwise costs one reshare round for the whole layer,
+    same as dense."""
+    kh, kw, cin_g, cout = (int(d) for d in w.shape)
+    if groups == 1:
+        cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
+        wmat = w.reshape(kh * kw * cin_g, cout)
+        return matmul(cols, wmat, parties, tag=tag, w_limbs=w_limbs)
+    z = _grouped_conv_parts(x, w, stride, padding, groups, w_limbs=w_limbs)
     return _reshare(z, x.ring, parties, tag=tag)
 
 
@@ -442,10 +462,12 @@ def bin_conv2d(x: RSS, w: RSS | PublicTensor, parties: Parties,
                stride: int = 1, padding: int = 0, groups: int = 1,
                tag: str = "bin_conv", w_limbs=None, bias_parts=None,
                bias_public=None) -> RSS:
-    """Binary-domain secure conv: im2col + `bin_matmul` (groups == 1), so
-    the post-Sign layer costs one reshare round (shared weights) or nothing
-    at all (public weights).  Public grouped (depthwise) convs run the
-    per-channel einsum locally on every held slot."""
+    """Binary-domain secure conv: im2col + `bin_matmul` (groups == 1) or the
+    per-channel grouped contraction (groups == Cin, the depthwise half of a
+    sepconv) — either way the post-Sign layer costs one reshare round
+    (shared weights) or nothing at all (public weights).  Public grouped
+    convs run locally on every held slot, through the grouped public-limb
+    kernel when ``w.limbs`` carries a `PublicGroupedLimbs` cache."""
     if isinstance(w, PublicTensor):
         assert bias_parts is None, \
             "public weights take bias_public (a public encoding), not " \
@@ -465,18 +487,31 @@ def bin_conv2d(x: RSS, w: RSS | PublicTensor, parties: Parties,
         cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
         slots = cols.shares.shape[0]
         cols5 = cols.shares.reshape(slots, b, ho, wo, kh * kw, cin)
-        wk = w.enc.reshape(kh * kw, cin, mult)
         comm.record(tag, rounds=0, nbytes=0)
-        z = jnp.einsum("sbhwkc,kcm->sbhwcm", cols5, wk,
-                       preferred_element_type=x.ring.dtype)
+        if w.limbs is not None:
+            from ..kernels.ops import bin_grouped_matmul_op
+            z = bin_grouped_matmul_op(cols5, w.limbs)
+        else:
+            wk = w.enc.reshape(kh * kw, cin, mult)
+            z = jnp.einsum("sbhwkc,kcm->sbhwcm", cols5, wk,
+                           preferred_element_type=x.ring.dtype)
         out = RSS(z.reshape(slots, b, ho, wo, cout), x.ring)
         if bias_public is not None:
             out = out.add_public(bias_public)
         return out
-    assert groups == 1, "shared depthwise convs use conv2d (same comm)"
     assert bias_public is None, \
         "shared weights take additive bias_parts, not a public encoding"
     kh, kw, cin_g, cout = (int(d) for d in w.shape)
+    if groups != 1:
+        # bin-shared depthwise: the ±1·W product already sits at scale f,
+        # so the whole grouped layer is the one reshare round — same parts
+        # arithmetic (and PRF draw order) as conv2d's grouped branch, hence
+        # bit-identical to the generic route
+        z = _grouped_conv_parts(x, w, stride, padding, groups,
+                                w_limbs=w_limbs)
+        if bias_parts is not None:
+            z = z + bias_parts
+        return _reshare(z, x.ring, parties, tag=tag)
     cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
     wmat = w.reshape(kh * kw * cin_g, cout)
     return bin_matmul(cols, wmat, parties, tag=tag, w_limbs=w_limbs,

@@ -41,7 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.bin_rss_matmul import public_weight_limbs
+from ..kernels.bin_rss_matmul import (grouped_weight_limbs,
+                                      public_grouped_limbs,
+                                      public_weight_limbs)
 from ..kernels.rss_matmul import precompute_weight_limbs
 from ..nn.bnn import ALL_NETS, INPUT_SHAPES, L
 from . import comm, transport
@@ -90,7 +92,9 @@ def compile_secure(params: dict, net: str, key,
     weight-share stack (and its fused operand w_i + w_{i+1}) into cached
     int8 limbs, so `secure_infer` routes the layer through the single-launch
     3-party Pallas kernel — weight limbs are never recomputed per query.
-    Depthwise (grouped) convs keep the einsum path (no kernel limbs).
+    Depthwise (grouped) convs get per-channel grouped limb caches
+    (`kernels.bin_rss_matmul.grouped_weight_limbs`) and run through the
+    grouped kernel instead of the per-party einsum.
 
     ``weights="public"`` keeps model parameters in the clear (the
     private-input / public-model deployment, DESIGN.md §11): linear layers
@@ -184,26 +188,56 @@ def compile_secure(params: dict, net: str, key,
         elif l.kind == "flatten":
             ops.append({"op": "flatten"})
         i += 1
-    _annotate_binary_paths(ops)
+    _annotate_binary_paths(ops, weights, binary_linear)
     return SecureModel(ops=ops, ring=ring, net=net,
                        use_kernel=use_kernel_dot, weights=weights,
                        binary_linear=binary_linear)
 
 
-def _annotate_binary_paths(ops: list) -> None:
-    """Static per-layer input-domain analysis (DESIGN.md §11).
+def _annotate_binary_paths(ops: list, weights: str = "shared",
+                           binary_linear: str = "auto") -> None:
+    """Static per-layer input-domain + path-taxonomy analysis (§11).
 
     Walks the compiled op list with the same transition rules the executor
     applies at runtime and stamps every linear op with ``binary_in``: True
     iff the layer spec guarantees its input is a Sign layer's ±1 integers
     at scale 0 (maxpool and flatten preserve the domain; linear / ReLU /
     affine leave it).  The executor dispatches paths off this flag, so the
-    routing is decided at compile time, not traced state."""
+    routing is decided at compile time, not traced state.
+
+    Each linear op additionally gets ``path`` — the human-readable §11
+    taxonomy label the compiler assigned ("arith" / "bin-shared" /
+    "bin-public" / "bin-public+trunc"); sepconv ops get a
+    ``(depthwise, pointwise)`` pair because the two halves can land on
+    different paths (a post-Sign depthwise is reshare-only or free, while
+    its pointwise always re-enters the fixed-point domain at 2f).
+    Benchmarks and the DESIGN.md table generator read these labels instead
+    of re-deriving the dispatch rules."""
+    public = weights == "public"
     binary = False
+
+    def label(binary_in: bool) -> str:
+        # "off" lifts ±1 to scale f at runtime, so even a post-Sign layer
+        # routes arith (the binarization-unaware ablation); ``binary_in``
+        # itself stays domain-truth — the cost accounting selects post-Sign
+        # layers by domain, not by the routing chosen for them
+        routed = binary_in and binary_linear != "off"
+        if public:
+            return "bin-public" if routed else "bin-public+trunc"
+        if routed and binary_linear == "auto":
+            return "bin-shared"
+        return "arith"
+
     for op in ops:
         kind = op["op"]
         if kind in ("conv", "sepconv", "fc"):
             op["binary_in"] = binary
+            if kind == "sepconv":
+                # pointwise input is the depthwise product at scale f —
+                # never binary, so the pw half always pays the truncation
+                op["path"] = (label(binary), label(False))
+            else:
+                op["path"] = label(binary)
             binary = False
         elif kind == "sign":
             binary = True
@@ -224,19 +258,29 @@ def _public_weight(w: np.ndarray, kind: str, part_idx: int, ring: RingSpec,
         elif kind == "conv" or (kind == "sepconv" and part_idx == 1):
             kh, kw, cin_g, cout = (int(d) for d in enc.shape)
             limbs = public_weight_limbs(enc.reshape(kh * kw * cin_g, cout))
+        else:  # depthwise half: per-channel public grouped limbs
+            kh, kw, cin_g, cout = (int(d) for d in enc.shape)
+            assert cin_g == 1, "depthwise kernels are (kh, kw, 1, Cin)"
+            limbs = public_grouped_limbs(
+                enc.reshape(kh * kw, cout, 1).transpose(1, 0, 2))
     return PublicTensor(enc, limbs)
 
 
 def _weight_limbs_for(w: RSS, kind: str, part_idx: int):
-    """Setup-time limb cache for one weight-share stack (or None when the
-    layer half can't use the matmul kernel, i.e. the depthwise conv)."""
+    """Setup-time limb cache for one weight-share stack: dense layers get
+    `WeightLimbs` for the fused matmul kernel; the depthwise half of a
+    sepconv gets the per-channel `GroupedWeightLimbs` for the grouped
+    kernel (bnn sepconvs use depthwise multiplier 1, so Cout == Cin)."""
     if kind == "fc":
         return precompute_weight_limbs(w.shares)
     if kind == "conv" or (kind == "sepconv" and part_idx == 1):
         kh, kw, cin_g, cout = (int(d) for d in w.shape)
         return precompute_weight_limbs(
             w.shares.reshape(3, kh * kw * cin_g, cout))
-    return None  # depthwise half of a sepconv
+    kh, kw, cin_g, cout = (int(d) for d in w.shape)
+    assert cin_g == 1, "depthwise kernels are (kh, kw, 1, Cin)"
+    return grouped_weight_limbs(
+        w.shares.reshape(3, kh * kw, cout, 1).transpose(0, 2, 1, 3))
 
 
 def _infer_linear_shared(h: RSS, op: dict, parties: Parties, idx: int,
@@ -254,14 +298,22 @@ def _infer_linear_shared(h: RSS, op: dict, parties: Parties, idx: int,
     wlimbs = op.get("wlimbs") or [None] * len(op["w"])
     kind = op["op"]
     if kind == "sepconv":
-        # separable: depthwise then pointwise (Alg 2 twice, Fig 3); the
-        # depthwise half stays on the einsum path.  A post-Sign depthwise
-        # product is already at scale f — reshare-only, no truncation.
+        # separable: depthwise then pointwise (Alg 2 twice, Fig 3), the
+        # depthwise half on the grouped kernel when limbs are cached.  A
+        # post-Sign depthwise product is already at scale f — the binary
+        # engine runs it as a first-class bin-shared layer (one reshare,
+        # no truncation); otherwise the arith route pays the dwtrunc.
         cin = int(h.shape[-1])
-        h = conv2d(h, op["w"][0], parties, stride=op["stride"],
-                   padding=op["pad"], groups=cin, tag=f"l{idx}.dwconv")
-        if not binary_in:
-            h = truncate(h, parties, tag=f"l{idx}.dwtrunc")
+        if binary_in and binary_engine:
+            h = bin_conv2d(h, op["w"][0], parties, stride=op["stride"],
+                           padding=op["pad"], groups=cin,
+                           tag=f"l{idx}.dwconv.bin", w_limbs=wlimbs[0])
+        else:
+            h = conv2d(h, op["w"][0], parties, stride=op["stride"],
+                       padding=op["pad"], groups=cin, tag=f"l{idx}.dwconv",
+                       w_limbs=wlimbs[0])
+            if not binary_in:
+                h = truncate(h, parties, tag=f"l{idx}.dwtrunc")
         at_2f = True
         lin, w_rss, wl = "pw", op["w"][1], wlimbs[1]
     else:

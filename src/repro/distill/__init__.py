@@ -1,1 +1,2 @@
 from .kd import kd_loss, train_bnn, evaluate, TrainResult
+from .pipeline import run_pipeline, PipelineRow, FAMILIES, MODES

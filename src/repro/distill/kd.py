@@ -4,6 +4,13 @@ Loss (paper eq. 5):  L = λ·H_stu(y, q) + (1−λ)·H_tea(p^T, q^T)
 with temperature-T softened teacher targets; the customized (binarized,
 separable-conv) student recovers the accuracy the MPC-friendly surgery
 costs — the paper's central customization claim (Figs. 5/6).
+
+This is the *training* stage of the customization pipeline (DESIGN.md
+§13): teacher → `train_bnn` student → ``TrainResult.params`` →
+`core.secure_model.compile_secure` — the params dict follows the `nn.bnn.L`
+spec contract, so it drops straight into the secure compiler.  The driver
+that runs the whole lifecycle and emits the accuracy-vs-online-bytes
+frontier is `distill.pipeline` / ``examples/distill_cbnn.py``.
 """
 from __future__ import annotations
 
@@ -33,12 +40,18 @@ def kd_loss(student_logits, labels, teacher_logits=None, lam: float = 1.0,
 
 @dataclasses.dataclass
 class TrainResult:
-    params: dict
+    params: dict           # bnn.L-contract params — compile_secure input
     history: list          # (epoch, train_loss, test_acc)
     param_count: int
 
 
 def evaluate(params, net, x, y, batch: int = 256, binarize=True) -> float:
+    """Plaintext top-1 accuracy (eval mode: running BN stats, hard Sign).
+
+    This is the accuracy the secure run must reproduce — `secure_infer`
+    executes the same eval-mode graph under MPC, so plaintext and secure
+    accuracy agree outside ulp-sized Sign margins (DESIGN.md §13;
+    tests/test_kd.py pins the equality on the synthetic eval set)."""
     correct = 0
     for i in range(0, len(x), batch):
         logits, _ = bnn.bnn_forward(params, jnp.asarray(x[i:i + batch]), net,
@@ -53,7 +66,14 @@ def train_bnn(net: str, data, *, epochs: int = 3, batch: int = 128,
               teacher=None, binarize: bool = True, seed: int = 0,
               bn_momentum: float = 0.9) -> TrainResult:
     """Train a (possibly binarized) net; optional KD from `teacher`
-    = (teacher_params, teacher_net)."""
+    = (teacher_params, teacher_net).
+
+    ``lam`` is the eq.-5 λ (1.0 = plain CE, <1 mixes the softened teacher
+    term at ``temperature``); ``binarize=False`` trains the full-precision
+    teacher itself.  ``data`` = (x_tr, y_tr, x_te, y_te) — see
+    `repro.data.image_dataset` for the synthetic offline sets (DESIGN.md
+    §9).  Returns a :class:`TrainResult` whose params feed
+    `compile_secure` directly."""
     x_tr, y_tr, x_te, y_te = data
     params = bnn.init_bnn(jax.random.PRNGKey(seed), net)
     opt = adamw_init(params)

@@ -9,8 +9,10 @@ Paper's customization recipe:
     ("MPC-friendly convolutions", Fig. 3) to cut parameters/compute,
   * trained with knowledge distillation from a full-precision teacher.
 
-Networks are sequential layer-spec lists so the secure executor
-(core/secure_model.py) can walk the same spec and pick protocols per layer.
+Networks are sequential layer-spec lists (see :class:`L`) so the secure
+executor (core/secure_model.py) can walk the same spec and pick protocols
+per layer — the customization pipeline (train here, compile there) is
+documented end-to-end in DESIGN.md §13.
 """
 from __future__ import annotations
 
@@ -30,6 +32,29 @@ Params = dict[str, Any]
 
 @dataclasses.dataclass(frozen=True)
 class L:
+    """One layer of a sequential net spec — the contract BOTH executors walk.
+
+    `bnn_forward` (plaintext training/eval) and `compile_secure` (the MPC
+    compiler, core/secure_model.py) interpret the same ``list[L]``, so a
+    trained params dict drops into the secure runtime with no conversion.
+    The shared conventions:
+
+    * params are keyed by *spec position* ``i``: ``l{i}_w``/``l{i}_b`` for
+      conv/fc, ``l{i}_dw``/``l{i}_pw``/``l{i}_b`` for sepconv,
+      ``l{i}_g``/``l{i}_beta``/``l{i}_mu``/``l{i}_var`` for bn — renumbering
+      the spec invalidates the dict (`init_bnn` and the compiler agree by
+      construction).
+    * ``sepconv`` is depthwise (multiplier 1, HWIO ``(k, k, 1, Cin)``)
+      followed by a 1×1 pointwise to ``out`` channels, bias on the
+      pointwise only (the paper's MPC-friendly convolution, Fig. 3).
+    * a ``bn`` immediately after a linear layer is fused at secure-compile
+      time (eq. 8 threshold when Sign follows and γ'>0, eqs. 10–11 weight
+      fold otherwise); a bare ``bn`` becomes a secure affine op.
+    * ``maxpool`` is fixed 2×2/stride 2; ``flatten`` ends spatial layout.
+    * ``act`` consumes no params; Sign feeds the ±1 binary domain the
+      compiler's path taxonomy keys on (DESIGN.md §11).
+    """
+
     kind: str           # conv | sepconv | fc | bn | act | maxpool | flatten
     out: int = 0        # output channels / units
     k: int = 3          # kernel
@@ -55,6 +80,14 @@ MNIST_NETS = {
     "MnistNet3": [L("conv", 16, k=5, pad=2), *_act("sign"), L("maxpool"),
                   L("conv", 16, k=5, pad=2), *_act("sign"), L("maxpool"),
                   L("flatten"), L("fc", 100), *_act("sign"), L("fc", 10)],
+    # MnistNet3 with the MPC-friendly separable surgery on its second conv
+    # (the first conv keeps a dense kernel: its input is 1-channel, where a
+    # depthwise conv degenerates) — the MNIST-family separable point on the
+    # customization Pareto frontier, and a post-Sign depthwise test net
+    "MnistNet3-sep": [L("conv", 16, k=5, pad=2), *_act("sign"), L("maxpool"),
+                      L("sepconv", 16, k=5, pad=2), *_act("sign"),
+                      L("maxpool"),
+                      L("flatten"), L("fc", 100), *_act("sign"), L("fc", 10)],
     # teacher: same shape, wider, ReLU, full precision
     "MnistNet4": [L("conv", 32, k=5, pad=2), *_act("relu"), L("maxpool"),
                   L("conv", 64, k=5, pad=2), *_act("relu"), L("maxpool"),

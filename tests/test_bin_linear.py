@@ -10,9 +10,15 @@ from repro.core import RING32, Parties, share
 from repro.core.linear import PublicTensor, bin_matmul
 from repro.core.secure_model import (compile_secure, post_sign_linear_cost,
                                      secure_infer, secure_infer_cost)
-from repro.kernels.bin_rss_matmul import (bin_rss_matmul_parts,
+from repro.kernels.bin_rss_matmul import (bin_grouped_matmul_parts,
+                                          bin_grouped_matmul_ref,
+                                          bin_rss_matmul_parts,
                                           bin_rss_matmul_ref,
+                                          grouped_rss_matmul_parts,
+                                          grouped_rss_matmul_ref,
+                                          grouped_weight_limbs,
                                           min_public_limbs,
+                                          public_grouped_limbs,
                                           public_weight_limbs)
 from repro.nn import bnn
 from test_secure_model import _grid_input, _random_net_params
@@ -92,6 +98,71 @@ def test_public_limb_collapse():
 
 
 # ---------------------------------------------------------------------------
+# Grouped (depthwise) kernels — the sepconv half of the §13 pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,m,k,n", [
+    (16, 196, 25, 1),    # MnistNet3-sep shape (5×5 depthwise, mult 1)
+    (4, 128, 9, 1),      # 3×3 depthwise
+    (3, 33, 9, 2),       # non-tile-aligned M, channel multiplier > 1
+])
+def test_grouped_shared_kernel_exact(c, m, k, n):
+    """Grouped shared-weight kernel == per-channel batched-dot reference ==
+    RSS identity, bit-exact mod 2^32 — the fused-operand Alg-2 per
+    channel."""
+    key = jax.random.PRNGKey(c + 7 * m + 13 * k)
+    xs = jax.random.bits(key, (3, c, m, k), jnp.uint32)
+    ws = jax.random.bits(jax.random.fold_in(key, 1), (3, c, k, n), jnp.uint32)
+    wl = grouped_weight_limbs(ws)
+    got = np.asarray(grouped_rss_matmul_parts(xs, wl, min_dim=1))
+    ref = np.asarray(grouped_rss_matmul_ref(xs, wl))
+    assert np.array_equal(got, ref)
+    # Σ_s z_s[c] == (Σ x_s)[c] @ (Σ w_s)[c] mod 2^32 per channel
+    tot = (got[0] + got[1] + got[2]).astype(np.uint32)
+    want = np.asarray(jax.lax.dot_general(
+        xs.sum(0), ws.sum(0), (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.uint32))
+    assert np.array_equal(tot, want)
+
+
+def test_grouped_kernel_pair_stack():
+    """Explicit x_next (the MeshTransport layout, own+next passed
+    separately) is bit-identical to the stacked-sim roll."""
+    key = jax.random.PRNGKey(5)
+    xs = jax.random.bits(key, (3, 4, 128, 9), jnp.uint32)
+    wl = grouped_weight_limbs(
+        jax.random.bits(jax.random.fold_in(key, 1), (3, 4, 9, 1), jnp.uint32))
+    implicit = np.asarray(grouped_rss_matmul_parts(xs, wl))
+    explicit = np.asarray(grouped_rss_matmul_parts(
+        xs, wl, x_next_stack=jnp.roll(xs, -1, axis=0)))
+    assert np.array_equal(implicit, explicit)
+
+
+@pytest.mark.parametrize("wmag", [1, 3000, 300000, None])  # L = 1/2/3/4
+def test_grouped_public_kernel_exact(wmag):
+    """Public grouped kernel at every adaptive limb count: == reference,
+    and Σ_s z_s[c] rebuilds x[c] @ W[c] with zero communication."""
+    key = jax.random.PRNGKey(0 if wmag is None else wmag)
+    c, m, k = 8, 160, 25
+    xs = jax.random.bits(key, (3, c, m, k), jnp.uint32)
+    if wmag is None:    # share-like uniform weight: needs all 4 limbs
+        w = jax.random.bits(jax.random.fold_in(key, 1), (c, k, 1), jnp.uint32)
+    else:
+        w = (jax.random.randint(jax.random.fold_in(key, 1), (c, k, 1),
+                                -wmag, wmag + 1)
+             .astype(jnp.int32).astype(jnp.uint32))
+    wl = public_grouped_limbs(w)
+    got = np.asarray(bin_grouped_matmul_parts(xs, wl, min_dim=1))
+    ref = np.asarray(bin_grouped_matmul_ref(xs, wl))
+    assert np.array_equal(got, ref)
+    tot = (got[0] + got[1] + got[2]).astype(np.uint32)
+    want = np.asarray(jax.lax.dot_general(
+        xs.sum(0), w, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.uint32))
+    assert np.array_equal(tot, want)
+
+
+# ---------------------------------------------------------------------------
 # End-to-end paths (LocalTransport; the Mesh backend equivalence is pinned
 # by tests/test_transport_mesh.py on the same modes)
 # ---------------------------------------------------------------------------
@@ -122,9 +193,21 @@ def test_bin_engine_bit_identical_to_arith_route(net, shape, batch,
     assert np.array_equal(got, ref)
 
 
+def test_sepconv_grouped_kernel_bit_identical():
+    """The grouped Pallas kernel (use_kernel_dot=True) is bit-identical to
+    the per-party einsum fallback on a sepconv net: same additive parts
+    mod 2^32, same single reshare, same PRF draw order."""
+    params = _random_net_params("MnistNet3-sep")
+    x = _grid_input((2, 28, 28, 1))
+    a, _ = _run_net(params, "MnistNet3-sep", x)
+    b, _ = _run_net(params, "MnistNet3-sep", x, use_kernel_dot=True)
+    assert np.array_equal(a, b)
+
+
 @pytest.mark.parametrize("net,shape,exact", [
     ("MnistNet1", (28, 28, 1), True),
     ("CifarNet2", (32, 32, 3), False),
+    ("MnistNet3-sep", (28, 28, 1), False),
 ])
 def test_public_weights_match_plaintext_and_kernel(net, shape, exact):
     """weights="public" computes the same function (grid-margin exact on
@@ -178,6 +261,56 @@ def test_postsign_wire_byte_reduction(net, shape):
     assert led_bin.nbytes < led_off.nbytes
     assert led_pub.nbytes < led_bin.nbytes
     assert led_pub.rounds < led_bin.rounds <= led_off.rounds
+
+
+def test_sepconv_depthwise_wire_costs():
+    """Depthwise as a first-class secure path (MnistNet3-sep):
+
+    * binary engine: the post-Sign depthwise is ONE reshare —
+      3 ring elements/output, no truncation opening (no dwtrunc tag);
+    * arith ablation: the same reshare PLUS the truncation opening
+      (2× the depthwise bytes), post-Sign total ≥20% worse than binary
+      (sepconv = 9n vs 12n elements, DESIGN.md §11/§13);
+    * public weights: the post-Sign depthwise is ZERO rounds/bytes."""
+    net, shape = "MnistNet3-sep", (28, 28, 1)
+    params = _random_net_params(net)
+    key = jax.random.PRNGKey(0)
+
+    def ledger(**kw):
+        model = compile_secure(params, net, key, RING32, **kw)
+        return model, secure_infer_cost(model, (1,) + shape)
+
+    m_bin, led_bin = ledger()
+    m_off, led_off = ledger(binary_linear="off")
+    m_pub, led_pub = ledger(weights="public")
+
+    dw = lambda led: {t: v for t, v in led.by_tag.items()
+                      if ".dw" in t and not t.startswith("pre:")}
+    dw_bin, dw_off, dw_pub = dw(led_bin), dw(led_off), dw(led_pub)
+
+    # bin engine: exactly one dw entry, the .bin reshare — 3 elements per
+    # depthwise output (14×14×16 after conv+maxpool), 1 round
+    (tag_bin, (r_bin, b_bin_dw)), = dw_bin.items()
+    assert tag_bin.endswith(".dwconv.bin") and r_bin == 1
+    assert b_bin_dw == 3 * (14 * 14 * 16) * 4, b_bin_dw
+
+    # ablation: same reshare bytes + an equal-sized truncation opening
+    assert sum(b for _, b in dw_off.values()) == 2 * b_bin_dw, dw_off
+    assert any(t.endswith(".dwtrunc") for t in dw_off)
+
+    # public: the depthwise records a visible zero
+    (tag_pub, cost_pub), = dw_pub.items()
+    assert tag_pub.endswith(".dwconv.pub") and cost_pub == [0, 0]
+
+    # post-Sign totals: binary ≥20% under arith; public keeps only the
+    # pointwise truncation opening (nonzero — the dw→pw seam, §11)
+    b_bin, _ = post_sign_linear_cost(m_bin, led_bin)
+    b_off, _ = post_sign_linear_cost(m_off, led_off)
+    b_pub, _ = post_sign_linear_cost(m_pub, led_pub)
+    assert b_off > 0
+    assert b_bin <= 0.8 * b_off, (b_bin, b_off)
+    assert 0 < b_pub < b_bin
+    assert led_pub.nbytes < led_bin.nbytes < led_off.nbytes
 
 
 def test_public_mode_zero_linear_ledger_entries():

@@ -60,3 +60,22 @@ def test_kd_with_teacher_runs(small_data):
                         temperature=10.0,
                         teacher=(teacher.params, "MnistNet4"))
     assert np.isfinite(student.history[-1][1])
+
+
+def test_distilled_student_secure_accuracy_matches_plaintext(small_data):
+    """§13 pipeline acceptance pin: running the distilled student under the
+    secure protocol stack reproduces the plaintext eval-mode accuracy on
+    the synthetic eval subset — `secure_infer` executes the same eval
+    graph under MPC, so the argmax decisions agree."""
+    from repro.distill import evaluate
+    from repro.distill.pipeline import _secure_accuracy
+
+    teacher = train_bnn("MnistNet4", small_data, epochs=1, binarize=False)
+    student = train_bnn("MnistNet1", small_data, epochs=1, lam=0.1,
+                        temperature=10.0,
+                        teacher=(teacher.params, "MnistNet4"))
+    x_te, y_te = small_data[2][:64], small_data[3][:64]
+    plain = evaluate(student.params, "MnistNet1", x_te, y_te)
+    secure = _secure_accuracy(student.params, "MnistNet1", x_te, y_te,
+                              mode_kw={})
+    assert secure == pytest.approx(plain), (secure, plain)

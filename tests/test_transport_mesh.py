@@ -74,6 +74,13 @@ run_case("MnistNet3", (28, 28, 1), 2, True, True, mesh3, weights="public")
 # arithmetic opening on both backends
 run_case("MnistNet1", (28, 28, 1), 4, False, True, mesh3,
          binary_linear="off")
+# depthwise-separable net (§13): the grouped kernel takes the per-party
+# pair layout (own+next passed separately) — all three weight/engine modes
+run_case("MnistNet3-sep", (28, 28, 1), 2, True, True, mesh3)
+run_case("MnistNet3-sep", (28, 28, 1), 2, True, True, mesh3,
+         weights="public")
+run_case("MnistNet3-sep", (28, 28, 1), 2, True, True, mesh3,
+         binary_linear="off")
 print("OK")
 """
 
