@@ -35,7 +35,12 @@ party-only mesh, jnp ring dots so the offline/online split is not
 drowned by interpret-mode Pallas cost on CPU) drawing its randomness
 inline; CI pins online-only strictly below that inline total on the mesh
 backend.  The ``.amortized`` sibling folds the offline plant's per-query
-generation cost back in."""
+generation cost back in.
+
+``secure.verify.<net>.local.b<batch>.{off,opens,full}`` rows time the
+integrity levels of DESIGN.md §14 on the same serving cell: CI pins
+``opens`` within ~10% of the unverified ``off`` row, and this module
+asserts all three produce bit-identical logits."""
 from __future__ import annotations
 
 import sys
@@ -51,6 +56,9 @@ MODE_CELLS = [("MnistNet1", 8, "arith", ("local",)),
 # matched inline total, + amortized
 ONLINE_CELLS = [("MnistNet1", 8, ("local", "mesh")),
                 ("MnistNet3", 4, ("local", "mesh"))]
+# verified-inference cells (DESIGN.md §14): off vs opens vs full on the
+# local backend; CI pins opens within ~10% of off and bit-identity
+VERIFY_CELLS = [("MnistNet3", 4)]
 COMM_NETS = ["MnistNet1", "MnistNet3"]
 QUERIES = 3
 
@@ -187,6 +195,48 @@ def _online_rows(net: str, batch: int, backends):
     return rows
 
 
+def _verify_rows(net: str, batch: int):
+    """Verified-inference overhead (DESIGN.md §14): the same local serving
+    cell at --verify off / opens / full.  The digest fold is a handful of
+    uint32 multiply-reduces fused into the traced program plus one
+    deferred compare-view exchange, so ``opens`` must stay within ~10% of
+    the unverified row — CI pins that ratio from the JSON.  Verified and
+    unverified outputs are asserted bit-identical here (the checks observe
+    values, they never perturb them)."""
+    import numpy as np
+    import jax
+    from repro.core import RING32, share
+    from repro.core.randomness import Parties
+    from repro.launch.serve_secure import make_runner
+    from repro.nn.bnn import INPUT_SHAPES
+
+    shape = INPUT_SHAPES[net]
+    model = _compile(net, "binary")
+    rng = np.random.default_rng(0)
+    x = (rng.integers(0, 2, (batch,) + shape).astype(np.float32) - 0.5)
+    xs = share(x, jax.random.PRNGKey(3), RING32)
+    keys = Parties.setup(jax.random.PRNGKey(7)).keys
+
+    rows, outs = [], {}
+    for mode in ("off", "opens", "full"):
+        run, _ = make_runner(model, "local", batch, verify=mode)
+        outs[mode] = np.asarray(run(keys, xs.shares))  # compile + warm
+        best = float("inf")
+        for _ in range(QUERIES):
+            t0 = time.perf_counter()
+            np.asarray(run(keys, xs.shares))
+            best = min(best, time.perf_counter() - t0)
+        note = ("unverified baseline" if mode == "off" else
+                f"{'opened values' if mode == 'opens' else 'opens + pair/send consistency'}"
+                " cross-checked; one deferred digest round")
+        rows.append((f"secure.verify.{net}.local.b{batch}.{mode}",
+                     best * 1e6, note))
+    assert np.array_equal(outs["off"], outs["opens"]) and \
+        np.array_equal(outs["off"], outs["full"]), \
+        "verified inference must be bit-identical to unverified"
+    return rows
+
+
 def _comm_rows(net: str):
     """Per-query online wire KB per deployment mode (batch 1) — the
     binary-domain byte trajectory, machine-readable in the JSON."""
@@ -226,6 +276,8 @@ def secure_e2e():
     for net, batch, wanted in ONLINE_CELLS:
         rows.extend(_online_rows(net, batch,
                                  [b for b in wanted if b in backends]))
+    for net, batch in VERIFY_CELLS:
+        rows.extend(_verify_rows(net, batch))
     for net in COMM_NETS:
         rows.extend(_comm_rows(net))
     return rows

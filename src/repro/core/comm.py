@@ -20,7 +20,7 @@ import jax
 
 __all__ = [
     "NetworkModel", "LAN", "WAN", "CommLedger", "track", "record",
-    "estimate_cost", "round_barrier",
+    "estimate_cost", "round_barrier", "add_listener", "remove_listener",
 ]
 
 
@@ -84,6 +84,20 @@ class CommLedger:
 
 _STACK: list[CommLedger] = []
 _PREPROCESS_DEPTH = 0
+# trace-time observers of every record() call, ledger or not — the
+# integrity verifier (core/integrity.py) uses this to attribute each
+# movement op's digest to the protocol tag + round index that moved it
+_LISTENERS: list[Callable] = []
+
+
+def add_listener(fn: Callable) -> None:
+    """Register ``fn(tag, rounds, nbytes, preprocess)`` to observe every
+    :func:`record` call (fires even with no tracking ledger active)."""
+    _LISTENERS.append(fn)
+
+
+def remove_listener(fn: Callable) -> None:
+    _LISTENERS.remove(fn)
 
 
 @contextlib.contextmanager
@@ -109,8 +123,11 @@ def track():
 
 
 def record(tag: str, rounds: int, nbytes: int, preprocess: bool = False):
-    """Called by protocols at trace time. No-op when no tracker is active."""
+    """Called by protocols at trace time. Ledger add is a no-op when no
+    tracker is active; listeners always fire."""
     preprocess = preprocess or _PREPROCESS_DEPTH > 0
+    for fn in _LISTENERS:
+        fn(tag, rounds, nbytes, preprocess)
     if _STACK:  # top-only: round_barrier propagates to its parent on exit
         _STACK[-1].add(tag, rounds, nbytes, preprocess=preprocess)
 

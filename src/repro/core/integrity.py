@@ -1,0 +1,518 @@
+"""Integrity layer for the 3-party secure runtime (DESIGN.md §14).
+
+CBNN's RSS protocols are honest-majority by construction: every share is
+held by two parties, every reshare message is recomputable by its
+receiver's other neighbour, and every opening is a value all three
+parties must agree on.  Deviation is therefore *detectable* almost for
+free — this module is the runtime actually looking:
+
+:class:`Verifier`
+    Verified openings / reshares / sends.  The transports
+    (core/transport.py) push a uint32 *digest* of every message view into
+    the active verifier at trace time; the per-party digest vectors are
+    compared cross-party once per inference (the single deferred
+    compare-view round the ledger records as ``verify.digest``), so the
+    hot path stays one extra reduce per movement op — never per-op
+    rounds.  ``mode="opens"`` digests only openings (any corrupted value
+    that ever reaches an opening is caught before the output is
+    released); ``mode="full"`` additionally cross-checks reshare pairs
+    and point-to-point sends, pinpointing the faulted op itself.
+    Violations surface host-side as a structured :class:`IntegrityError`
+    carrying the op path label (layer tag), op kind + index, round
+    index, and offending party slot.
+
+:class:`FaultInjectingTransport`
+    The chaos harness that proves detection: a transport wrapper
+    (composes over ``LocalTransport`` and ``MeshTransport``) that
+    deterministically corrupts / zeroes / replays / drops configured
+    messages by (op kind, op index, receiving party).  The corrupted
+    value is what the program sees (so an unverified run demonstrably
+    produces a wrong answer), while honest views feed the other
+    parties' digests — exactly the asymmetry a real deviation creates.
+
+Typed failure taxonomy: every detected deviation or desync raises an
+:class:`IntegrityError` subclass (a ``RuntimeError``), so serving layers
+can catch one family: :class:`MaterialDesyncError` for tape/spec
+mismatches (core/preprocessing.py) and :class:`PoolExhaustedError` for
+tape-pool underruns (launch/serve_secure.py).
+
+What is *not* detected (semi-honest with deviation detection, not full
+malicious security): a consistent-but-wrong dealer (shares that
+reconstruct to a wrong value), colluding parties (two corrupted parties
+can forge matching digests), and input substitution by the data owner.
+See DESIGN.md §14 for the full failure model.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import comm
+
+__all__ = ["IntegrityError", "MaterialDesyncError", "PoolExhaustedError",
+           "Verifier", "VERIFY_MODES", "REPORT_KEYS", "fold_digest",
+           "verify_scope", "active", "FaultInjectingTransport", "Fault",
+           "verify_tape_slice", "verify_model_ingest"]
+
+PARTIES = 3
+
+VERIFY_MODES = ("off", "opens", "full")
+
+# report pytree keys — always all present so mesh out_specs are static
+REPORT_KEYS = ("open", "pair_own", "pair_recv", "send_own", "send_recv")
+
+
+class IntegrityError(RuntimeError):
+    """A party deviation / runtime corruption the integrity layer caught.
+
+    Attributes (``None`` when not applicable): ``tag`` — the protocol op
+    path label active when the message moved (e.g. ``l0.fc``, ``output``);
+    ``op`` — movement kind (``open`` / ``reshare`` / ``send``); ``index``
+    — 0-based per-kind op counter within the inference; ``round`` — the
+    ledger's cumulative round index at the op; ``party`` — offending
+    party slot (the receiver whose view diverged)."""
+
+    def __init__(self, msg, *, tag=None, op=None, index=None, round=None,
+                 party=None):
+        super().__init__(msg)
+        self.tag = tag
+        self.op = op
+        self.index = index
+        self.round = round
+        self.party = party
+
+
+class MaterialDesyncError(IntegrityError):
+    """Tape material does not match the traced MaterialSpec (wrong draw
+    order, shape, ring, or slab layout) — consuming it would silently
+    break the protocol, so the online phase aborts instead."""
+
+
+class PoolExhaustedError(IntegrityError):
+    """The tape pool ran out of preprocessing material for the demanded
+    queries (offline budget exceeded) — refusing to serve beats the
+    silent desync of replaying consumed correlated randomness."""
+
+
+# ---------------------------------------------------------------------------
+# Digests
+# ---------------------------------------------------------------------------
+
+def fold_digest(x) -> jax.Array:
+    """Position-weighted uint32 fold of a message tensor — one fused
+    multiply-reduce.  Injective enough for fault detection: any single
+    changed element changes the digest unless its delta * odd weight
+    wraps to 0 mod 2^32 (impossible for the injector's bit-flip/zero
+    deltas on distinct values)."""
+    v = jnp.ravel(x)
+    if v.dtype.itemsize == 8:  # fold 64-bit lanes before the cast
+        v = v ^ (v >> jnp.asarray(32, v.dtype))
+    v = v.astype(jnp.uint32)
+    w = ((jnp.arange(v.size, dtype=jnp.uint32) << 1) | 1) \
+        * jnp.uint32(0x9E3779B1)
+    return jnp.sum(v * w, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# The verifier
+# ---------------------------------------------------------------------------
+
+class Verifier:
+    """Deferred compare-view verification of one traced secure inference.
+
+    Transports push per-op digest entries via ``observe_*`` while a
+    :func:`verify_scope` is active; ``traced_report()`` (called inside
+    the traced function) stacks them into the report pytree the runner
+    returns next to the output; host-side :meth:`check` compares the
+    per-party digest columns and raises :class:`IntegrityError` on the
+    earliest diverging op.
+
+    Entry flavors: under ``LocalTransport`` each entry is a ``(3,)`` row
+    (all parties' views are in-program); under ``MeshTransport`` each
+    entry is this party's scalar and the runner's ``out_specs`` stack
+    the three parties' vectors.  Both reach :meth:`check` as ``(3, n)``.
+
+    One verifier serves one traced program: re-tracing (``verify_scope``
+    re-entry) resets the op metadata, so build one per compiled runner —
+    the same contract as ``Parties``."""
+
+    def __init__(self, mode: str = "full"):
+        assert mode in VERIFY_MODES, mode
+        self.mode = mode
+        self.begin()
+
+    # -- trace-time recording -------------------------------------------
+    def begin(self):
+        self.rows = {k: [] for k in REPORT_KEYS}
+        self.meta = []          # one dict per verified op, in trace order
+        self._tag = None        # updated by the comm.record listener
+        self._rounds = 0
+
+    def _listen(self, tag, rounds, nbytes, preprocess):
+        self._tag = tag
+        self._rounds += rounds
+
+    def _note(self, kind, entries, **info):
+        idx = len(self.rows[next(iter(entries))])
+        self.meta.append(dict(kind=kind, idx=idx, tag=self._tag,
+                              round=self._rounds, **info))
+        for key, e in entries.items():
+            self.rows[key].append(jnp.asarray(e, jnp.uint32))
+
+    def observe_open(self, digest):
+        """One opening (open_parts / open_rss): ``digest`` of the opened
+        value — (3,) per-party views (local) or this party's scalar."""
+        if self.mode != "off":
+            self._note("open", {"open": digest})
+
+    def observe_pair(self, own, recv):
+        """One reshare round: digests of the part each party computed
+        (``own``) and of the copy it received (``recv``).  Honest iff
+        ``recv[i] == own[(i+1) % 3]``."""
+        if self.mode == "full":
+            self._note("reshare", {"pair_own": own, "pair_recv": recv})
+
+    def observe_send(self, own, recv, frm: int, to: int):
+        """One point-to-point send: digest of the sent value at ``frm``
+        vs the received value at ``to``."""
+        if self.mode == "full":
+            self._note("send", {"send_own": own, "send_recv": recv},
+                       frm=frm, to=to)
+
+    def traced_report(self) -> dict:
+        """The per-party digest report (a jax pytree), recorded on the
+        ledger as the ONE extra compare-view round of the inference."""
+        n_ops = len(self.meta)
+        comm.record("verify.digest", rounds=1 if n_ops else 0,
+                    nbytes=PARTIES * sum(len(v) for v in self.rows.values())
+                    * 4)
+        return {k: (jnp.stack(v, axis=-1) if v
+                    else jnp.zeros((0,), jnp.uint32))
+                for k, v in self.rows.items()}
+
+    # -- host-side check ------------------------------------------------
+    def check(self, report: dict):
+        """Raise :class:`IntegrityError` for the earliest diverging op in
+        ``report`` (host-side; syncs the digest vectors only)."""
+        if self.mode == "off":
+            return
+        import numpy as np
+        rep = {k: np.asarray(v).reshape(PARTIES, -1)
+               if np.asarray(v).size else np.zeros((PARTIES, 0), np.uint32)
+               for k, v in report.items()}
+        for m in self.meta:
+            kind, idx = m["kind"], m["idx"]
+            if kind == "open":
+                col = rep["open"][:, idx]
+                if col[0] == col[1] == col[2]:
+                    continue
+                party = next((p for p in range(PARTIES)
+                              if col[(p + 1) % 3] == col[(p + 2) % 3]
+                              and col[p] != col[(p + 1) % 3]), None)
+                self._raise(m, party,
+                            f"opened views diverge across parties "
+                            f"(digests {[hex(int(c)) for c in col]})")
+            elif kind == "reshare":
+                own, recv = rep["pair_own"][:, idx], rep["pair_recv"][:, idx]
+                for i in range(PARTIES):
+                    if recv[i] != own[(i + 1) % 3]:
+                        self._raise(
+                            m, i,
+                            f"reshare pair inconsistent: P{i} received "
+                            f"{hex(int(recv[i]))}, P{(i + 1) % 3} computed "
+                            f"{hex(int(own[(i + 1) % 3]))}")
+            else:  # send
+                frm, to = m["frm"], m["to"]
+                own, recv = rep["send_own"][:, idx], rep["send_recv"][:, idx]
+                if recv[to] != own[frm]:
+                    self._raise(
+                        m, to,
+                        f"send P{frm}->P{to} tampered: sent "
+                        f"{hex(int(own[frm]))}, received "
+                        f"{hex(int(recv[to]))}")
+
+    def _raise(self, m, party, detail):
+        raise IntegrityError(
+            f"integrity violation in {m['kind']} #{m['idx']} "
+            f"(op {m['tag']!r}, round {m['round']}, party "
+            f"{'?' if party is None else party}): {detail} — aborting "
+            f"before releasing an output",
+            tag=m["tag"], op=m["kind"], index=m["idx"], round=m["round"],
+            party=party)
+
+
+_ACTIVE: list[Verifier] = []
+
+
+def active() -> Verifier | None:
+    """The verifier the transports should push digests into, if any."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def verify_scope(v: Verifier | None):
+    """Activate ``v`` for the enclosed trace (no-op for ``None``/off)."""
+    if v is None or v.mode == "off":
+        yield None
+        return
+    v.begin()
+    _ACTIVE.append(v)
+    comm.add_listener(v._listen)
+    try:
+        yield v
+    finally:
+        comm.remove_listener(v._listen)
+        _ACTIVE.pop()
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: the chaos harness
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One deterministic fault: corrupt the message *received* by
+    ``party`` in the ``index``-th movement op of kind ``op``.
+
+    op:    "open" (open_parts + open_rss share one counter), "reshare"
+           (transport.complete), or "send" (point-to-point).
+    mode:  "corrupt" (bit flip: ^1 on bit shares, ^(1<<16) on ring
+           words), "zero" (null message), "replay" (previous same-kind
+           message, zeros when shapes differ), "drop" (message never
+           arrives; the receiver times out and substitutes zeros — in
+           the simulation both model as zero-fill, a *true* silent drop
+           is a hang and is covered by the per-test timeout).
+    party: receiving party slot.  For "send", ``None`` targets the op's
+           natural receiver."""
+
+    op: str
+    index: int
+    mode: str
+    party: int | None = None
+
+    def __post_init__(self):
+        assert self.op in ("open", "reshare", "send"), self.op
+        assert self.mode in ("corrupt", "zero", "replay", "drop"), self.mode
+        assert self.party is not None or self.op == "send", \
+            "open/reshare faults must name the receiving party"
+
+
+class FaultInjectingTransport:
+    """Transport wrapper injecting configured :class:`Fault`s.
+
+    Reimplements the four movement ops (never delegating movement to the
+    base, so honest-path digests are not double-observed); everything
+    else forwards to the wrapped ``LocalTransport`` / ``MeshTransport``.
+
+    The *program-visible* value is the corrupted receiver's view — under
+    ``LocalTransport`` the single simulated trajectory follows the
+    victim, so an unverified run returns a wrong answer; under
+    ``MeshTransport`` only the victim device diverges, exactly like a
+    real network fault.  The verifier's digests see honest views for the
+    other parties, so ``check`` attributes the fault to the configured
+    receiving party.
+
+    One instance serves one traced program (trace-time counters), like
+    ``Parties`` — call :meth:`fresh` or build a new one per trace."""
+
+    def __init__(self, base, faults):
+        self.base = base
+        self.faults = [f if isinstance(f, Fault) else Fault(**f)
+                       for f in faults]
+        self.fresh()
+
+    def fresh(self):
+        self._counts = {"open": 0, "reshare": 0, "send": 0}
+        self._stale = {}   # op kind -> previous honest message (replay)
+        self.fired = []    # (op, index, Fault) actually injected
+        return self
+
+    def __getattr__(self, name):
+        return getattr(self.base, name)
+
+    # -- fault plumbing --------------------------------------------------
+    def _match(self, op: str) -> Fault | None:
+        k = self._counts[op]
+        self._counts[op] += 1
+        for f in self.faults:
+            if f.op == op and f.index == k:
+                return f
+        return None
+
+    def _tamper(self, f: Fault, honest, op: str):
+        """The corrupted message replacing ``honest``."""
+        if f.mode in ("zero", "drop"):
+            bad = jnp.zeros_like(honest)
+        elif f.mode == "corrupt":
+            flip = 1 if honest.dtype == jnp.uint8 else (1 << 16)
+            bad = honest ^ jnp.asarray(flip, honest.dtype)
+        else:  # replay
+            prev = self._stale.get(op)
+            bad = (prev if prev is not None and prev.shape == honest.shape
+                   and prev.dtype == honest.dtype
+                   else jnp.zeros_like(honest))
+        self.fired.append((op, self._counts[op] - 1, f))
+        return bad
+
+    def _observe_open(self, entry):
+        v = active()
+        if v is not None:
+            v.observe_open(entry)
+
+    # -- movement ops (both flavors) -------------------------------------
+    def complete(self, parts):
+        f = self._match("reshare")
+        v = active()
+        if self.base.carries_pair:
+            recv = self.base._recv_from_next(parts)
+            honest = recv
+            if f is not None:
+                bad = self._tamper(f, recv, "reshare")
+                recv = jnp.where(self.base._pid() == f.party, bad, recv)
+            self._stale["reshare"] = honest
+            if v is not None:
+                v.observe_pair(fold_digest(parts[0]), fold_digest(recv[0]))
+            return jnp.concatenate([parts, recv], axis=0)
+        stack = parts
+        recv_msgs = [stack[(i + 1) % PARTIES] for i in range(PARTIES)]
+        out = stack
+        if f is not None:
+            t = f.party
+            bad = self._tamper(f, recv_msgs[t], "reshare")
+            recv_msgs[t] = bad
+            # the victim's received copy is what downstream compute uses
+            out = stack.at[(t + 1) % PARTIES].set(bad)
+        self._stale["reshare"] = stack[0]
+        if v is not None:
+            own = [fold_digest(stack[i]) for i in range(PARTIES)]
+            v.observe_pair(jnp.stack(own),
+                           jnp.stack([fold_digest(m) for m in recv_msgs]))
+        return out
+
+    def open_parts(self, parts):
+        return self._open(parts, "parts")
+
+    def open_rss(self, stack):
+        return self._open(stack, "rss")
+
+    def _open(self, shares, which: str):
+        f = self._match("open")
+        if self.base.carries_pair:
+            if which == "parts":
+                g = jax.lax.all_gather(shares[0], self.base.axis, axis=0)
+                o = g[0] + g[1] + g[2]
+                msgs, stale = g, g[0]
+            else:
+                third = self.base._recv_from_next(shares[1])
+                o = shares[0] + shares[1] + third
+                msgs, stale = None, third  # noqa: msgs unused for rss
+            if f is not None:
+                if which == "parts":
+                    # the victim's copy of the part it received from its
+                    # successor (the same channel open_rss uses)
+                    honest = msgs[(f.party + 1) % PARTIES]
+                else:
+                    honest = stale
+                bad = self._tamper(f, honest, "open")
+                o = jnp.where(self.base._pid() == f.party,
+                              o - honest + bad, o)
+            self._stale["open"] = stale
+            self._observe_open(fold_digest(o))
+            return o
+        o = shares[0] + shares[1] + shares[2]
+        views = [o] * PARTIES
+        if f is not None:
+            t = f.party
+            # open_parts: the part P_t receives from its successor;
+            # open_rss: P_{t+1} forwards the missing share x_{t+2}
+            src = (t + 2) % PARTIES if which == "rss" else (t + 1) % PARTIES
+            honest = shares[src]
+            bad = self._tamper(f, honest, "open")
+            views[t] = o - honest + bad
+        self._stale["open"] = shares[0]
+        self._observe_open(jnp.stack([fold_digest(x) for x in views]))
+        # the program follows the victim's trajectory
+        return views[f.party] if f is not None else o
+
+    def send(self, x, frm: int, to: int):
+        f = self._match("send")
+        live = f is not None and f.party in (None, to)
+        v = active()
+        if self.base.carries_pair:
+            r = jax.lax.ppermute(x, self.base.axis, [(frm, to)])
+            if live:
+                bad = self._tamper(f, r, "send")
+                r = jnp.where(self.base._pid() == to, bad, r)
+            self._stale["send"] = x
+            if v is not None:
+                v.observe_send(fold_digest(x), fold_digest(r), frm, to)
+            return r
+        out = x
+        d_own = fold_digest(x)
+        d_recv = d_own
+        if live:
+            out = self._tamper(f, x, "send")
+            d_recv = fold_digest(out)
+        self._stale["send"] = x
+        if v is not None:
+            row = jnp.stack([d_own] * PARTIES)
+            v.observe_send(row, row.at[to].set(d_recv), frm, to)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Ingest-time consistency checks (host-side, metadata + pair algebra)
+# ---------------------------------------------------------------------------
+
+def verify_tape_slice(spec, slabs: dict) -> None:
+    """Cheap structural check of one query's tape slabs against the
+    traced :class:`MaterialSpec` before the online phase consumes them:
+    every slab present, right per-query shape, right dtype.  Raises
+    :class:`MaterialDesyncError` (host metadata only — no device sync)."""
+    want = spec.slab_structs()
+    for k, st in want.items():
+        arr = slabs.get(k)
+        if arr is None:
+            raise MaterialDesyncError(
+                f"material tape desync: slab {k!r} missing from the tape "
+                f"(expected {st.shape} {st.dtype})")
+        if tuple(arr.shape) != tuple(st.shape) or arr.dtype != st.dtype:
+            raise MaterialDesyncError(
+                f"material tape desync: slab {k!r} is {tuple(arr.shape)} "
+                f"{arr.dtype}, traced spec wants {tuple(st.shape)} "
+                f"{st.dtype}")
+    extra = set(slabs) - set(want)
+    if extra:
+        raise MaterialDesyncError(
+            f"material tape desync: unexpected slabs {sorted(extra)!r}")
+
+
+def verify_model_ingest(model) -> None:
+    """RSS pair-consistency check on ingested model shares: every shared
+    parameter stack must carry the full 3-party replication (leading axis
+    3, the ring dtype) so the dealer's pair handoff
+    (``make_secure_infer_mesh``'s own + rolled copies) is well defined.
+    Raises :class:`IntegrityError` naming the op index and entry."""
+    from .rss import RSS, BinRSS
+    for i, op in enumerate(model.ops):
+        for key, val in op.items():
+            stacks = val if isinstance(val, (list, tuple)) else [val]
+            for j, s in enumerate(stacks):
+                if not isinstance(s, (RSS, BinRSS)):
+                    continue
+                sh = tuple(int(d) for d in s.shares.shape)
+                if sh[0] != PARTIES:
+                    raise IntegrityError(
+                        f"model ingest: op {i} ({op['op']}) entry "
+                        f"{key!r}[{j}] share stack has leading axis "
+                        f"{sh[0]}, expected {PARTIES}-party replication",
+                        tag=f"l{i}.{key}", op="ingest", index=i)
+                if isinstance(s, RSS) and s.shares.dtype != model.ring.dtype:
+                    raise IntegrityError(
+                        f"model ingest: op {i} ({op['op']}) entry "
+                        f"{key!r}[{j}] dtype {s.shares.dtype} does not "
+                        f"match the model ring {model.ring.dtype}",
+                        tag=f"l{i}.{key}", op="ingest", index=i)

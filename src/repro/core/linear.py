@@ -570,9 +570,9 @@ def truncate_probabilistic(x: RSS, parties: Parties, frac: int | None = None,
     rp_parts = zero + (r_shift.astype(ring.dtype)
                        * t.party_mask_parts(0, len(shape), ring.dtype))
     # the preprocessing reshare that turns the additive [r >> f] into RSS
-    rp = RSS(t.complete(rp_parts), ring)
     comm.record(tag, rounds=1, nbytes=3 * _numel(x) * ring.nbytes,
                 preprocess=True)
+    rp = RSS(t.complete(rp_parts), ring)
     masked = reveal(x - r, tag=tag)
     public = (ring.to_signed(masked) >> f).astype(ring.dtype)
     return rp.add_public(public)

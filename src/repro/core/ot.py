@@ -71,6 +71,11 @@ def ot3(m0, m1, choice_shares, choice_slot: int | None = None, *,
     kidx = pair_key_index(sender, receiver)
     mask0, mask1 = parties.ot_masks(kidx, m0.shape, ring)
 
+    # recorded before the sends so trace-time observers (the integrity
+    # verifier's tag listener) attribute the movement to this op
+    n = int(m0.size)
+    comm.record(tag, rounds=2, nbytes=3 * n * ring.nbytes, preprocess=preprocess)
+
     # Step 2-3: sender masks and sends (s0, s1) to helper.
     s0 = t.send(m0 ^ mask0, sender, helper)
     s1 = t.send(m1 ^ mask1, sender, helper)
@@ -78,7 +83,4 @@ def ot3(m0, m1, choice_shares, choice_slot: int | None = None, *,
     sc = t.send(jnp.where(cb.astype(bool), s1, s0), helper, receiver)
     # Step 5: receiver unmasks (receiver knows c and the masks).
     mc = sc ^ jnp.where(cb.astype(bool), mask1, mask0)
-
-    n = int(m0.size)
-    comm.record(tag, rounds=2, nbytes=3 * n * ring.nbytes, preprocess=preprocess)
     return mc

@@ -43,18 +43,21 @@ like the inline PRF draws they replace.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from . import comm, transport
+from .integrity import (MaterialDesyncError, PoolExhaustedError,
+                        verify_tape_slice)
 from .randomness import Parties
 from .ring import RingSpec
 from .rss import RSS, BinRSS, PARTIES
 
 __all__ = ["MaterialItem", "MaterialSpec", "MaterialTape", "TapeParties",
-           "trace_material", "make_tape_generator", "generate_tape",
-           "tape_session_keys", "online_cost",
+           "TapePool", "trace_material", "make_tape_generator",
+           "generate_tape", "tape_session_keys", "online_cost",
            "STACK_PAIR", "STACK_PARTS", "REPLICATED"]
 
 # slab layout classes (how a party-sliced consumer reads the slab)
@@ -364,19 +367,54 @@ class TapeParties(Parties):
 
     def _take(self, kind, shape, aux, ring):
         if self._pos >= len(self.spec.items):
-            raise RuntimeError(
+            raise MaterialDesyncError(
                 f"material tape exhausted: online program drew more than "
                 f"the {len(self.spec.items)} traced items (kind={kind})")
         it = self.spec.items[self._pos]
         base, slot = self.spec.index[self._pos]
         shape = tuple(int(d) for d in shape)
         if (it.kind, it.shape, it.aux, it.ring) != (kind, shape, aux, ring):
-            raise RuntimeError(
-                f"material tape desync at draw {self._pos}: traced "
+            raise MaterialDesyncError(
+                f"material tape desync at draw {self._pos} (kind={it.kind!r} "
+                f"cnt={it.cnt}): traced "
                 f"{(it.kind, it.shape, it.aux, it.ring)}, online asked "
                 f"{(kind, shape, aux, ring)} — retrace the MaterialSpec")
+        self._validate_slabs(it, base)
         self._pos += 1
         return base, slot
+
+    def _validate_slabs(self, it: MaterialItem, base: str):
+        """Trace-time structural check of the slabs this draw will read:
+        right dtype (the item's ring), right trailing tensor shape, and
+        the party-axis layout the *active transport* consumes (whole
+        stacks under LocalTransport, per-device rows under
+        MeshTransport).  A tampered / truncated / re-ringed slab fails
+        loudly here instead of silently corrupting the protocol."""
+        t = transport.current()
+        lead = {STACK_PAIR: t.rss_slots, STACK_PARTS: t.parts_slots,
+                REPLICATED: 0}
+        for suffix, layout, dt in _KIND_FIELDS[it.kind]:
+            arr = self.slabs.get(base + suffix)
+            dtype = jnp.uint8 if dt == "bits" else it.ring.dtype
+            inner = (2,) + it.shape if it.kind == "ot_masks" else it.shape
+            n_lead = lead[layout]
+            # (slots?, n_slots, *inner): one slab axis per traced slot
+            want_ndim = (1 if n_lead == 0 else 2) + len(inner)
+            ok = (arr is not None and arr.dtype == dtype
+                  and arr.ndim == want_ndim
+                  and (not inner
+                       or tuple(int(d) for d in arr.shape[-len(inner):])
+                       == inner)
+                  and (n_lead == 0 or int(arr.shape[0]) == n_lead))
+            if not ok:
+                got = (None if arr is None
+                       else f"{tuple(arr.shape)} {arr.dtype}")
+                raise MaterialDesyncError(
+                    f"material tape desync at draw {self._pos}: slab "
+                    f"{base + suffix!r} for kind={it.kind!r} cnt={it.cnt} "
+                    f"is {got}, expected party lead {n_lead or 'none'} + "
+                    f"tail {inner} {dtype} under the "
+                    f"{type(t).__name__} layout")
 
     # -- draw points ------------------------------------------------------
     def zero_shares(self, shape, ring=None):
@@ -423,6 +461,122 @@ class TapeParties(Parties):
     def rand_rss_open(self, shape, ring=None):
         raise NotImplementedError(
             "rand_rss_open (truncate_probabilistic baseline) is inline-only")
+
+
+# ---------------------------------------------------------------------------
+# The pool: bounded, accounted, backpressured tape supply
+# ---------------------------------------------------------------------------
+
+class TapePool:
+    """Double-buffered supply of per-query tape slices with explicit
+    accounting (DESIGN.md §14).
+
+    Refill dispatch runs ahead of consumption (JAX async dispatch
+    overlaps the offline plant with online batches, like PR 4's
+    ``serve_pool`` loop), but unlike the old loop every buffer is
+    *demand-gated*: with ``demand`` total slices declared up front, the
+    pool never generates a buffer no query will consume — a trailing
+    partial buffer costs exactly the refills it needs (the old loop
+    silently generated and discarded one full extra buffer whenever
+    ``queries`` was not a multiple of the depth, polluting amortized
+    throughput).
+
+    Underrun is explicit instead of a desync: when consumption overtakes
+    the prefetched supply the pool blocks on a synchronous refill and
+    warns (backpressure — the online phase is waiting on offline work);
+    when the budget (``demand`` or ``max_buffers``) is spent it raises
+    :class:`~repro.core.integrity.PoolExhaustedError` rather than
+    replaying consumed correlated randomness.
+
+    ``verify=True`` structurally checks every slice against the traced
+    spec before handing it out (:func:`integrity.verify_tape_slice` —
+    host metadata only, the ``--verify full`` serving mode)."""
+
+    def __init__(self, gen, spec: MaterialSpec, depth: int, master_key,
+                 demand: int | None = None, max_buffers: int | None = None,
+                 verify: bool = False, prefetch: bool = True):
+        if depth < 1:
+            raise ValueError(f"pool depth must be >= 1, got {depth}")
+        self.gen = gen
+        self.spec = spec
+        self.depth = depth
+        self.master_key = master_key
+        self.demand = demand
+        self.max_buffers = max_buffers
+        self.verify = verify
+        self.prefetch = prefetch   # dispatch the next buffer ahead of need
+        self.taken = 0
+        self.generated = 0   # buffers dispatched so far
+        self.refills = 0     # buffers beyond the initial one
+        self._bufs: list = []    # FIFO of [MaterialTape, next slot]
+        self._warned_dry = False
+        self._prefetch()
+        if prefetch:
+            self._prefetch()
+
+    def _want_more(self) -> bool:
+        if self.max_buffers is not None and self.generated >= self.max_buffers:
+            return False
+        if self.demand is not None \
+                and self.generated * self.depth >= self.demand:
+            return False
+        return True
+
+    def _prefetch(self):
+        if not self._want_more():
+            return
+        keys = tape_session_keys(
+            jax.random.fold_in(self.master_key, self.generated), self.depth)
+        self._bufs.append([MaterialTape(self.gen(keys), self.spec,
+                                        self.depth), 0])
+        self.generated += 1
+        if self.generated > 1:
+            self.refills += 1
+
+    @property
+    def supply(self) -> int:
+        """Slices generated and not yet consumed."""
+        return self.generated * self.depth - self.taken
+
+    def take(self) -> dict:
+        """The next per-query slab slice, dispatching the next refill as
+        a buffer drains.  Warns on backpressure, raises
+        :class:`PoolExhaustedError` when the budget is spent."""
+        if self._bufs and self._bufs[0][1] >= self.depth:
+            self._bufs.pop(0)       # drained: swap + prefetch the next
+            if self.prefetch:
+                self._prefetch()
+        if not self._bufs:
+            if not self._want_more():
+                raise PoolExhaustedError(
+                    f"material pool exhausted after {self.taken} slices: "
+                    f"offline budget spent ({self.generated} buffers x "
+                    f"depth {self.depth}"
+                    + (f", demand {self.demand}" if self.demand else "")
+                    + ") — raise --pool-depth or the buffer budget")
+            # backpressure: budget remains but no buffer is ready — the
+            # online phase blocks on a synchronous refill
+            warnings.warn(
+                "tape pool underrun: online phase blocked on a "
+                "synchronous refill (offline plant is falling behind)",
+                RuntimeWarning, stacklevel=2)
+            self._prefetch()
+        if self.demand is not None and not self._warned_dry \
+                and self.demand - self.taken > self.supply \
+                and not self._want_more():
+            self._warned_dry = True
+            warnings.warn(
+                f"tape pool nearly exhausted: {self.supply} slices left "
+                f"for {self.demand - self.taken} demanded — later queries "
+                f"will abort with PoolExhaustedError",
+                RuntimeWarning, stacklevel=2)
+        tape, slot = self._bufs[0]
+        self._bufs[0][1] += 1
+        self.taken += 1
+        sl = tape.query_slice(slot)
+        if self.verify:
+            verify_tape_slice(self.spec, sl)
+        return sl
 
 
 # ---------------------------------------------------------------------------

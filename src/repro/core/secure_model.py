@@ -584,7 +584,9 @@ def make_secure_infer_mesh(model: SecureModel, mesh, *,
                            party_axis: str = "party",
                            batch_axis: str | None = None,
                            reveal_output: bool = True,
-                           tape_spec=None):
+                           tape_spec=None,
+                           verifier=None,
+                           transport_wrap=None):
     """Build a jit-able mesh-backend runner for ``secure_infer``.
 
     Returns ``fn(keys, x_stack) -> (3, B, classes)`` where ``x_stack`` is
@@ -612,13 +614,27 @@ def make_secure_infer_mesh(model: SecureModel, mesh, *,
     pre-paired like the model shares (own + rolled, ``ingest``), parts
     slabs shard to their own row, key-replicated slabs stay whole.  The
     material is traced at the full query batch, so it composes with the
-    party axis only (no ``batch_axis``)."""
+    party axis only (no ``batch_axis``).
+
+    ``verifier`` (an :class:`~repro.core.integrity.Verifier`) switches the
+    runner to verified inference: the traced program digests every
+    opening/reshare/send view and ``fn`` returns ``(out, report)`` — run
+    ``verifier.check(report)`` host-side before releasing ``out``
+    (DESIGN.md §14).  ``transport_wrap`` wraps the per-party transport
+    (e.g. :class:`~repro.core.integrity.FaultInjectingTransport` — the
+    chaos harness)."""
     from jax.sharding import PartitionSpec as P
+
+    from . import integrity
 
     assert mesh.shape[party_axis] == 3, \
         f"mesh axis {party_axis!r} must have size 3"
     assert tape_spec is None or batch_axis is None, \
         "tape playback is traced at the global batch — party-only mesh"
+    # the verified runner returns (out, digest report); report vectors are
+    # per party, so the digest layout composes with the party axis only
+    assert verifier is None or batch_axis is None, \
+        "verified mesh serving runs party-only (digest report layout)"
     arrays, pub_arrays, rebuild = _split_arrays(model.ops)
     for a in arrays:
         assert int(a.shape[0]) == 3, f"expected party-stacked array: {a.shape}"
@@ -634,12 +650,20 @@ def make_secure_infer_mesh(model: SecureModel, mesh, *,
     in_specs = (P(), x_spec, x_spec, (w_spec,) * n_arr, (w_spec,) * n_arr,
                 (P(),) * len(pub_arrays), w_spec, w_spec, w_spec, P())
     out_specs = P(party_axis, batch_axis)
+    if verifier is not None:
+        # (out, digest report): each report leaf is this party's digest
+        # vector, stacked to (3, n) across the party axis for the
+        # host-side cross-party compare (integrity.Verifier.check)
+        out_specs = (out_specs,
+                     {k: P(party_axis) for k in integrity.REPORT_KEYS})
     cnt0 = 0
 
     def inner(keys, x_own, x_nxt, arrs_own, arrs_nxt, pub_arrs,
               tp_own, tp_nxt, tp_parts, tp_repl):
         t = transport.MeshTransport(party_axis)
-        with transport.use_transport(t):
+        if transport_wrap is not None:
+            t = transport_wrap(t)
+        with transport.use_transport(t), integrity.verify_scope(verifier):
             if tape_spec is not None:
                 slabs = {k: t.ingest(tp_own[k], tp_nxt[k]) for k in tp_own}
                 slabs.update(tp_parts)
@@ -657,8 +681,13 @@ def make_secure_infer_mesh(model: SecureModel, mesh, *,
             x = RSS(t.ingest(x_own, x_nxt), model.ring)
             out = secure_infer(m, x, prt, reveal_output=reveal_output)
             if reveal_output:
-                return out[None]      # replicated opening, stacked per party
-            return t.own_view(out.shares)
+                out = out[None]       # replicated opening, stacked per party
+            else:
+                out = t.own_view(out.shares)
+            if verifier is None:
+                return out
+            rep = verifier.traced_report()
+            return out, {k: v[None] for k, v in rep.items()}
 
     sm = transport.shard_map_compat(inner, mesh=mesh, in_specs=in_specs,
                                     out_specs=out_specs,

@@ -64,6 +64,8 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from . import integrity
+
 try:
     from jax import shard_map as shard_map_compat
 except ImportError:  # jax<0.7 layout
@@ -123,10 +125,20 @@ class LocalTransport:
     def complete(self, parts):
         """Additive parts -> RSS stack.  The reshare data movement: P_i
         sends z_i to P_{i-1}.  The stacked sim already holds every slot."""
+        v = integrity.active()
+        if v is not None:
+            own = [integrity.fold_digest(parts[i]) for i in range(PARTIES)]
+            v.observe_pair(jnp.stack(own),
+                           jnp.stack([own[(i + 1) % PARTIES]
+                                      for i in range(PARTIES)]))
         return parts
 
     def send(self, x, frm: int, to: int):
         """Point-to-point message; globally visible in simulation."""
+        v = integrity.active()
+        if v is not None:
+            row = jnp.stack([integrity.fold_digest(x)] * PARTIES)
+            v.observe_send(row, row, frm, to)
         return x
 
     def merge_recv(self, primary, received, holder: int):
@@ -137,12 +149,20 @@ class LocalTransport:
     # -- openings --------------------------------------------------------
     def open_parts(self, parts):
         """All parties learn sum of additive parts (each P_i broadcasts)."""
-        return parts[0] + parts[1] + parts[2]
+        o = parts[0] + parts[1] + parts[2]
+        v = integrity.active()
+        if v is not None:
+            v.observe_open(jnp.stack([integrity.fold_digest(o)] * PARTIES))
+        return o
 
     def open_rss(self, stack):
         """Reveal a shared value: P_i sends x_i to P_{i-1} (each party is
         missing exactly one share thanks to the pair invariant)."""
-        return stack[0] + stack[1] + stack[2]
+        o = stack[0] + stack[1] + stack[2]
+        v = integrity.active()
+        if v is not None:
+            v.observe_open(jnp.stack([integrity.fold_digest(o)] * PARTIES))
+        return o
 
     # -- party-indexed construction --------------------------------------
     def build_rss(self, vals: Sequence):
@@ -233,10 +253,20 @@ class MeshTransport:
 
     # -- movement --------------------------------------------------------
     def complete(self, parts):
-        return jnp.concatenate([parts, self._recv_from_next(parts)], axis=0)
+        recv = self._recv_from_next(parts)
+        v = integrity.active()
+        if v is not None:
+            v.observe_pair(integrity.fold_digest(parts[0]),
+                           integrity.fold_digest(recv[0]))
+        return jnp.concatenate([parts, recv], axis=0)
 
     def send(self, x, frm: int, to: int):
-        return jax.lax.ppermute(x, self.axis, [(frm, to)])
+        r = jax.lax.ppermute(x, self.axis, [(frm, to)])
+        v = integrity.active()
+        if v is not None:
+            v.observe_send(integrity.fold_digest(x),
+                           integrity.fold_digest(r), frm, to)
+        return r
 
     def merge_recv(self, primary, received, holder: int):
         return jnp.where(self._pid() == holder, received, primary)
@@ -244,13 +274,21 @@ class MeshTransport:
     # -- openings --------------------------------------------------------
     def open_parts(self, parts):
         g = jax.lax.all_gather(parts[0], self.axis, axis=0)
-        return g[0] + g[1] + g[2]
+        o = g[0] + g[1] + g[2]
+        v = integrity.active()
+        if v is not None:
+            v.observe_open(integrity.fold_digest(o))
+        return o
 
     def open_rss(self, stack):
         # P_i holds (x_i, x_{i+1}); the missing x_{i+2} is the neighbour's
         # second component — one ppermute, exactly the ledger's 3 messages.
         third = self._recv_from_next(stack[1])
-        return stack[0] + stack[1] + third
+        o = stack[0] + stack[1] + third
+        v = integrity.active()
+        if v is not None:
+            v.observe_open(integrity.fold_digest(o))
+        return o
 
     # -- party-indexed construction --------------------------------------
     def build_rss(self, vals: Sequence):

@@ -32,6 +32,15 @@ runs the full CBNN protocol stack under either transport backend:
     consumes a tape slice — the compiled online program contains ZERO
     PRF work, so online-only latency drops below the inline total.
 
+``--verify`` selects the integrity level (DESIGN.md §14):
+
+  * ``off`` (default) — semi-honest execution, no checks.
+  * ``opens`` — every opened value is cross-checked across the redundant
+    share views via one deferred compare-view digest exchange per
+    inference; a mismatch aborts with the offending layer/op/round/party.
+  * ``full`` — additionally checks reshare/send pair consistency, the
+    ingested model shares, and every consumed tape slice's structure.
+
 Reports throughput (online-only vs amortized-total under ``pool``) plus
 the per-query CommLedger and its modeled LAN/WAN wall-clock, total and
 online-only.
@@ -60,102 +69,155 @@ def build(net: str, use_kernel: bool, weights: str = "shared",
     return model
 
 
-def make_runner(model, backend: str, batch: int, party_axis: str = "party"):
-    """Compile-once runner fn(keys, x_stack) -> (B, classes) logits."""
+def make_runner(model, backend: str, batch: int, party_axis: str = "party",
+                verify: str = "off"):
+    """Compile-once runner fn(keys, x_stack) -> (B, classes) logits.
+
+    ``verify`` selects the integrity level (DESIGN.md §14): ``"opens"``
+    cross-checks every opened value across the redundant share views,
+    ``"full"`` additionally checks reshare/send pair consistency.  The
+    verified program returns a digest report alongside the logits; the
+    wrapper checks it on the host and raises
+    :class:`~repro.core.integrity.IntegrityError` (with the offending
+    layer/op/round/party) before releasing an output."""
     import jax
     import numpy as np
+    from repro.core import integrity
     from repro.core.rss import RSS
     from repro.core.secure_model import make_secure_infer_mesh, secure_infer
     from repro.core.randomness import Parties
 
+    v = None if verify == "off" else integrity.Verifier(verify)
     if backend == "local":
+        if v is None:
+            def run(keys, x_stack):
+                return secure_infer(model, RSS(x_stack, model.ring),
+                                    Parties(keys))
+            return jax.jit(run), None
+
+        def raw(keys, x_stack):
+            with integrity.verify_scope(v):
+                out = secure_infer(model, RSS(x_stack, model.ring),
+                                   Parties(keys))
+                return out, v.traced_report()
+        jitted = jax.jit(raw)
+
         def run(keys, x_stack):
-            return secure_infer(model, RSS(x_stack, model.ring),
-                                Parties(keys))
-        return jax.jit(run), None
+            out, rep = jitted(keys, x_stack)
+            v.check(rep)
+            return out
+        return run, None
 
     n_dev = len(jax.devices())
     if n_dev < 3:
         raise SystemExit(f"mesh backend needs >= 3 devices, have {n_dev} "
                          "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
-    data = max(d for d in range(1, n_dev // 3 + 1) if batch % d == 0)
+    # the digest report layout is per-party: verified mesh runs party-only
+    data = 1 if v is not None else \
+        max(d for d in range(1, n_dev // 3 + 1) if batch % d == 0)
     devs = np.asarray(jax.devices()[:3 * data])
     if data > 1:
         mesh = jax.sharding.Mesh(devs.reshape(3, data), (party_axis, "data"))
         fn = make_secure_infer_mesh(model, mesh, batch_axis="data")
     else:
         mesh = jax.sharding.Mesh(devs, (party_axis,))
-        fn = make_secure_infer_mesh(model, mesh)
+        fn = make_secure_infer_mesh(model, mesh, verifier=v)
     jitted = jax.jit(fn)
-    return (lambda keys, x_stack: jitted(keys, x_stack)[0]), mesh
+    if v is None:
+        return (lambda keys, x_stack: jitted(keys, x_stack)[0]), mesh
+
+    def run(keys, x_stack):
+        out, rep = jitted(keys, x_stack)
+        v.check(rep)
+        return out[0]
+    return run, mesh
 
 
-def make_tape_runner(model, spec, backend: str, party_axis: str = "party"):
+def make_tape_runner(model, spec, backend: str, party_axis: str = "party",
+                     verify: str = "off"):
     """Compile-once ONLINE phase for a MaterialTape (DESIGN.md §12),
     returned as ``(run, prepare, mesh)``: ``prepare(x_stack, slabs)`` is
     the dealer-side staging (under ``mesh`` it builds the pre-paired slab
     copies — offline-phase work, outside the compiled online program and
     outside online timing) and ``run(keys, prepared) -> logits`` is the
-    PRF-free online step."""
+    PRF-free online step.  ``verify`` as in :func:`make_runner`."""
     import jax
     import numpy as np
+    from repro.core import integrity
     from repro.core.preprocessing import make_tape_infer
     from repro.core.secure_model import make_secure_infer_mesh
 
+    v = None if verify == "off" else integrity.Verifier(verify)
     if backend == "local":
-        jitted = jax.jit(make_tape_infer(model, spec))
-        return (lambda keys, prepared: jitted(keys, *prepared),
-                lambda x_stack, slabs: (x_stack, slabs), None)
+        base = make_tape_infer(model, spec)
+        if v is None:
+            jitted = jax.jit(base)
+            return (lambda keys, prepared: jitted(keys, *prepared),
+                    lambda x_stack, slabs: (x_stack, slabs), None)
+
+        def raw(keys, x_stack, slabs):
+            with integrity.verify_scope(v):
+                out = base(keys, x_stack, slabs)
+                return out, v.traced_report()
+        jitted = jax.jit(raw)
+
+        def run(keys, prepared):
+            out, rep = jitted(keys, *prepared)
+            v.check(rep)
+            return out
+        return run, (lambda x_stack, slabs: (x_stack, slabs)), None
     n_dev = len(jax.devices())
     if n_dev < 3:
         raise SystemExit(f"mesh backend needs >= 3 devices, have {n_dev} "
                          "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     # tape material is traced at the global batch: party-only mesh
     mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:3]), (party_axis,))
-    fn = make_secure_infer_mesh(model, mesh, tape_spec=spec)
+    fn = make_secure_infer_mesh(model, mesh, tape_spec=spec, verifier=v)
     jitted = jax.jit(fn)
-    return (lambda keys, prepared: jitted(keys, prepared)[0],
-            fn.prepare, mesh)
+    if v is None:
+        return (lambda keys, prepared: jitted(keys, prepared)[0],
+                fn.prepare, mesh)
+
+    def run(keys, prepared):
+        out, rep = jitted(keys, prepared)
+        v.check(rep)
+        return out[0]
+    return run, fn.prepare, mesh
 
 
 def serve_pool(run, prepare, gen, spec, keys, xs_shares, queries: int,
-               depth: int, master_key):
-    """Double-buffered tape pool: consume ``depth``-slot tapes while the
-    next refill is already dispatched (JAX async dispatch overlaps it with
-    the online batches).  Per query, the dealer-side ``prepare`` staging
-    runs outside the online timer.  Returns (outputs, online_s, total_s,
-    refills)."""
+               depth: int, master_key, verify: str = "off"):
+    """Serve ``queries`` batches from a demand-gated :class:`TapePool`
+    (double-buffered: the next refill is dispatched while online batches
+    run).  Per query, the dealer-side ``prepare`` staging runs outside
+    the online timer.  The pool generates exactly
+    ``ceil((queries + 1) / depth)`` buffers — a trailing partial buffer
+    costs only the refills it needs — and turns over-consumption into
+    backpressure (block + warn) and then a typed
+    :class:`~repro.core.integrity.PoolExhaustedError` instead of silent
+    material reuse.  Returns (outputs, online_s, total_s, refills)."""
     import jax
-    from repro.core.preprocessing import MaterialTape, tape_session_keys
+    from repro.core.preprocessing import TapePool
 
-    def buf_keys(i):
-        return tape_session_keys(jax.random.fold_in(master_key, i), depth)
-
-    cur = MaterialTape(gen(buf_keys(0)), spec, depth)
-    nxt = MaterialTape(gen(buf_keys(1)), spec, depth)
-    # warm the online compile outside the timed loop
-    jax.block_until_ready(run(keys, prepare(xs_shares,
-                                            cur.query_slice(0))))
+    if queries < 1:
+        raise ValueError(f"queries must be >= 1, got {queries}")
+    # +1: the compile warm-up consumes one slice before the timed loop
+    pool = TapePool(gen, spec, depth, master_key, demand=queries + 1,
+                    verify=verify == "full")
+    jax.block_until_ready(run(keys, prepare(xs_shares, pool.take())))
 
     out = None
-    slot, buf_i, refills = 1, 1, 0   # slot 0 was consumed by the warm-up
     online_s = 0.0
     t0 = time.perf_counter()
     for _ in range(queries):
-        if slot == depth:              # buffer exhausted: swap + refill
-            cur, slot = nxt, 0
-            buf_i += 1
-            refills += 1
-            nxt = MaterialTape(gen(buf_keys(buf_i)), spec, depth)
-        prepared = prepare(xs_shares, cur.query_slice(slot))
+        prepared = prepare(xs_shares, pool.take())
         jax.block_until_ready(prepared)   # staging done before the clock
-        slot += 1
         t1 = time.perf_counter()
         out = run(keys, prepared)
         jax.block_until_ready(out)
         online_s += time.perf_counter() - t1
     total_s = time.perf_counter() - t0
-    return out, online_s, total_s, refills
+    return out, online_s, total_s, pool.refills
 
 
 def main():
@@ -188,8 +250,16 @@ def main():
                          "correlated randomness inside the online query, "
                          "or serve from a double-buffered MaterialTape "
                          "pool generated ahead of traffic")
-    ap.add_argument("--pool-depth", type=int, default=8, metavar="K",
-                    help="queries of material per tape buffer (pool mode)")
+    ap.add_argument("--pool-depth", type=int, default=None, metavar="K",
+                    help="queries of material per tape buffer (pool mode "
+                         "only; default 8)")
+    ap.add_argument("--verify", choices=("off", "opens", "full"),
+                    default="off",
+                    help="integrity level (DESIGN.md §14): cross-check "
+                         "opened values across redundant share views "
+                         "(opens), plus reshare/send pair consistency and "
+                         "tape-slab structure (full); any deviation aborts "
+                         "with the offending layer/op/round/party")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the query generator and sharing keys")
     ap.add_argument("--json", default="", metavar="PATH")
@@ -198,13 +268,38 @@ def main():
     import jax
     import numpy as np
     from repro.core import RING32, comm, share
+    from repro.core.integrity import IntegrityError, verify_model_ingest
     from repro.core.randomness import Parties
     from repro.core.secure_model import secure_infer_cost
     from repro.nn.bnn import INPUT_SHAPES
 
+    # argument validation with actionable errors (exit code 2, argparse
+    # style) before any compilation work
+    if args.net not in INPUT_SHAPES:
+        ap.error(f"unknown --net {args.net!r}; available: "
+                 + ", ".join(sorted(INPUT_SHAPES)))
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1, got {args.batch}")
+    if args.queries < 1:
+        ap.error(f"--queries must be >= 1, got {args.queries}")
+    if args.weights == "public" and args.binary_linear == "generic":
+        ap.error("--weights public has no generic Alg-2 route (public "
+                 "layers are local share algebra); use --binary-linear "
+                 "auto or off")
+    if args.pool_depth is not None and args.offline != "pool":
+        ap.error("--pool-depth only applies to --offline pool")
+    if args.pool_depth is not None and args.pool_depth < 1:
+        ap.error(f"--pool-depth must be >= 1, got {args.pool_depth}")
+    pool_depth = args.pool_depth if args.pool_depth is not None else 8
+
     shape = INPUT_SHAPES[args.net]
     model = build(args.net, not args.no_kernel, args.weights,
                   args.binary_linear)
+    if args.verify == "full":
+        # structural RSS pair-consistency check on the ingested shares
+        verify_model_ingest(model)
+        print("[serve_secure] model ingest verified "
+              f"({len(model.ops)} layers)")
 
     led = secure_infer_cost(model, (args.batch,) + shape)
     parties = Parties.setup(jax.random.PRNGKey(args.seed + 7))
@@ -215,58 +310,66 @@ def main():
 
     stats = {"net": args.net, "backend": args.backend, "batch": args.batch,
              "weights": args.weights, "offline": args.offline,
+             "verify": args.verify,
              "comm_mb_per_query": led.megabytes, "rounds": led.rounds}
 
-    if args.offline == "pool":
-        from repro.core.preprocessing import (make_tape_generator,
-                                              trace_material)
-        if args.pool_depth < 1:
-            ap.error("--pool-depth must be >= 1")
-        spec = trace_material(model, (args.batch,) + shape)
-        print(f"[serve_secure] material spec: {spec.summary()}")
-        gen = make_tape_generator(spec)
-        run, prepare, mesh = make_tape_runner(model, spec, args.backend)
-        if mesh is not None:
-            print(f"[serve_secure] mesh axes "
-                  f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
-        out, online_s, total_s, refills = serve_pool(
-            run, prepare, gen, spec, parties.keys, xs.shares, args.queries,
-            args.pool_depth, jax.random.PRNGKey(args.seed + 11))
-        out = np.asarray(out)
-        assert out.shape[0] == args.batch
-        qps_on = args.queries / online_s
-        qps_total = args.queries / total_s
-        print(f"[serve_secure] {args.net} backend={args.backend} "
-              f"batch={args.batch} offline=pool depth={args.pool_depth}: "
-              f"{args.queries} queries, online-only {qps_on:.2f} q/s "
-              f"({qps_on * args.batch:.1f} img/s), amortized total "
-              f"{qps_total:.2f} q/s ({qps_total * args.batch:.1f} img/s, "
-              f"{refills} refills)")
-        stats.update({"pool_depth": args.pool_depth,
-                      "query_per_s_online": qps_on,
-                      "img_per_s_online": qps_on * args.batch,
-                      "query_per_s": qps_total,
-                      "img_per_s": qps_total * args.batch})
-    else:
-        run, mesh = make_runner(model, args.backend, args.batch)
-        if mesh is not None:
-            print(f"[serve_secure] mesh axes "
-                  f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
-        out = np.asarray(run(parties.keys, xs.shares))  # compile + warm
-        assert out.shape[0] == args.batch
-        t0 = time.time()
-        for q in range(args.queries):
-            out = run(parties.keys, xs.shares)
-        np.asarray(out)
-        dt = time.time() - t0
-        qps = args.queries / dt
-        ips = qps * args.batch
-        print(f"[serve_secure] {args.net} backend={args.backend} "
-              f"batch={args.batch} kernel={not args.no_kernel} "
-              f"weights={args.weights}: "
-              f"{args.queries} queries in {dt:.2f}s = {qps:.2f} q/s "
-              f"({ips:.1f} img/s)")
-        stats.update({"img_per_s": ips, "query_per_s": qps})
+    try:
+        if args.offline == "pool":
+            from repro.core.preprocessing import (make_tape_generator,
+                                                  trace_material)
+            spec = trace_material(model, (args.batch,) + shape)
+            print(f"[serve_secure] material spec: {spec.summary()}")
+            gen = make_tape_generator(spec)
+            run, prepare, mesh = make_tape_runner(model, spec, args.backend,
+                                                  verify=args.verify)
+            if mesh is not None:
+                print(f"[serve_secure] mesh axes "
+                      f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+            out, online_s, total_s, refills = serve_pool(
+                run, prepare, gen, spec, parties.keys, xs.shares,
+                args.queries, pool_depth,
+                jax.random.PRNGKey(args.seed + 11), verify=args.verify)
+            out = np.asarray(out)
+            assert out.shape[0] == args.batch
+            qps_on = args.queries / online_s
+            qps_total = args.queries / total_s
+            print(f"[serve_secure] {args.net} backend={args.backend} "
+                  f"batch={args.batch} offline=pool depth={pool_depth} "
+                  f"verify={args.verify}: "
+                  f"{args.queries} queries, online-only {qps_on:.2f} q/s "
+                  f"({qps_on * args.batch:.1f} img/s), amortized total "
+                  f"{qps_total:.2f} q/s ({qps_total * args.batch:.1f} "
+                  f"img/s, {refills} refills)")
+            stats.update({"pool_depth": pool_depth,
+                          "query_per_s_online": qps_on,
+                          "img_per_s_online": qps_on * args.batch,
+                          "query_per_s": qps_total,
+                          "img_per_s": qps_total * args.batch})
+        else:
+            run, mesh = make_runner(model, args.backend, args.batch,
+                                    verify=args.verify)
+            if mesh is not None:
+                print(f"[serve_secure] mesh axes "
+                      f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+            out = np.asarray(run(parties.keys, xs.shares))  # compile + warm
+            assert out.shape[0] == args.batch
+            t0 = time.time()
+            for q in range(args.queries):
+                out = run(parties.keys, xs.shares)
+            np.asarray(out)
+            dt = time.time() - t0
+            qps = args.queries / dt
+            ips = qps * args.batch
+            print(f"[serve_secure] {args.net} backend={args.backend} "
+                  f"batch={args.batch} kernel={not args.no_kernel} "
+                  f"weights={args.weights} verify={args.verify}: "
+                  f"{args.queries} queries in {dt:.2f}s = {qps:.2f} q/s "
+                  f"({ips:.1f} img/s)")
+            stats.update({"img_per_s": ips, "query_per_s": qps})
+    except IntegrityError as e:
+        # deviation detected: abort with diagnostics, never a wrong answer
+        print(f"[serve_secure] ABORT: {e}", file=sys.stderr)
+        raise SystemExit(3)
 
     # modeled network wall-clock: total (online + preprocessing) next to
     # the online-only phase the tape pool leaves on the wire

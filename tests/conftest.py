@@ -1,4 +1,5 @@
 import os
+import signal
 import subprocess
 import sys
 from pathlib import Path
@@ -7,6 +8,31 @@ import jax
 import pytest
 
 from repro.core import RING32, Parties
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    """Per-test timeout fallback so a hung mesh collective fails the run
+    instead of wedging it.  CI installs pytest-timeout (--timeout flag,
+    requirements-dev.txt) and that plugin takes precedence; environments
+    without it can export REPRO_TEST_TIMEOUT=<seconds> to get a SIGALRM
+    backstop (POSIX only, whole seconds)."""
+    limit = int(os.environ.get("REPRO_TEST_TIMEOUT", "0") or 0)
+    if (limit <= 0 or item.config.pluginmanager.hasplugin("timeout")
+            or not hasattr(signal, "SIGALRM")):
+        return (yield)
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded REPRO_TEST_TIMEOUT={limit}s")
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(limit)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture
