@@ -117,11 +117,52 @@ def kernels():
     rows.append(("kernel.flash_attn_ref.512", _t(f4, q, kk, v) * 1e6,
                  f"tpu_v5e_ideal_us={attn_flops/197e12*1e6:.2f}"))
 
-    # SSD chunked scan (mamba2 hot spot): interpret-mode correctness is in
-    # tests/test_ssd_kernel.py; project the intra-chunk matrix-form FLOPs.
+    # SSD chunked scan (mamba2 hot spot): the kernel itself, platform-default
+    # lowering (interpret on CPU, compiled on TPU) — a real wall-clock, not
+    # the placeholder this row used to fabricate.
+    from repro.kernels.ssd import ssd_scan
     s, hh, hd, n, qc = 512, 4, 64, 32, 64
+    xs = jax.random.normal(jax.random.fold_in(key, 9), (1, s, hh, hd),
+                           jnp.float32) * 0.5
+    bm = jax.random.normal(jax.random.fold_in(key, 10), (1, s, n)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(key, 11), (1, s, n)) * 0.5
+    da = -jax.random.uniform(jax.random.fold_in(key, 12), (1, s, hh)) * 0.5
+    dt = jax.random.uniform(jax.random.fold_in(key, 13), (1, s, hh)) * 0.9 \
+        + 0.1
+    f5 = jax.jit(lambda *a: ssd_scan(*a, chunk=qc))
     ssd_flops = 2 * s * hh * (qc * n + qc * hd + 2 * hd * n)
-    rows.append(("kernel.ssd_scan.512", 0.0,
+    rows.append(("kernel.ssd_scan.512", _t(f5, xs, bm, cm, da, dt) * 1e6,
                  f"tpu_v5e_ideal_us={ssd_flops/197e12*1e6:.3f} "
                  f"chunk={qc} (intra-chunk MXU matrix form)"))
+    rows.extend(autotune_rows())
+    return rows
+
+
+def autotune_rows():
+    """Measured autotuner wins (DESIGN.md §15): the fixed default config vs
+    the cache's best per launch, from the same persisted JSON the compiler
+    consults (`benchmarks/autotune_cache.json`).  On CPU the headline move
+    is lowering=ref (the interpreted Pallas grid loop loses to XLA by
+    orders of magnitude on grouped shapes); on TPU the same machinery
+    searches block shapes."""
+    from pathlib import Path
+
+    from repro.kernels import autotune
+    from repro.kernels.lowering import DEFAULT_CONFIG
+
+    cache = Path(__file__).resolve().parent / "autotune_cache.json"
+    rows = []
+    for family, m, k, n, n_limbs, ch in (
+            ("rss_matmul", 256, 256, 256, 4, None),
+            ("grouped_rss_matmul", 256, 9, 1, 4, 16)):
+        best, timings = autotune.autotune(
+            family, m, k, n, n_limbs=n_limbs, channels=ch, iters=2,
+            smoke=True, cache_path=cache)
+        best_us = timings[best]
+        default_us = timings.get(DEFAULT_CONFIG, best_us)
+        rows.append((f"kernel.autotune.{family}.{m}.default", default_us,
+                     f"cfg={DEFAULT_CONFIG.describe()}"))
+        rows.append((f"kernel.autotune.{family}.{m}.tuned", best_us,
+                     f"cfg={best.describe()} speedup_vs_default="
+                     f"{default_us / max(best_us, 1e-9):.2f}x"))
     return rows

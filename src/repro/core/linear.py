@@ -145,18 +145,21 @@ def _ring_dot(a, b, ring: RingSpec):
         preferred_element_type=ring.dtype)
 
 
-def _matmul_parts(x: RSS, w: RSS | None, dot, w_limbs) -> jax.Array:
+def _matmul_parts(x: RSS, w: RSS | None, dot, w_limbs,
+                  kcfg=None) -> jax.Array:
     """Additive product stack z_i (parts layout) — local compute, no comm.
 
     With ``w_limbs`` (a kernels.rss_matmul.WeightLimbs cached at model
     setup) the whole 3-party product runs in ONE fused Pallas launch:
     activations are limb-decomposed once per share slab, weight limbs
-    (including the fused operand w_i + w_{i+1}) come precomputed."""
+    (including the fused operand w_i + w_{i+1}) come precomputed.
+    ``kcfg`` (an autotuned `kernels.lowering.KernelConfig`, attached by
+    `compile_secure`) selects that launch's block sizes / lowering."""
     t = transport.current()
     if w_limbs is not None:
         from ..kernels.ops import rss_matmul_parts_op
         return rss_matmul_parts_op(t.own_view(x.shares),
-                                   t.next_view(x.shares), w_limbs)
+                                   t.next_view(x.shares), w_limbs, cfg=kcfg)
     dot = dot or (lambda a, b: _ring_dot(a, b, x.ring))
     xo, wo = t.own_view(x.shares), t.own_view(w.shares)
     xn, wn = t.next_view(x.shares), t.next_view(w.shares)
@@ -171,7 +174,7 @@ def _matmul_parts(x: RSS, w: RSS | None, dot, w_limbs) -> jax.Array:
 
 
 def matmul(x: RSS, w: RSS | None, parties: Parties, tag: str = "matmul",
-           dot=None, w_limbs=None) -> RSS:
+           dot=None, w_limbs=None, kcfg=None) -> RSS:
     """Secure matmul  z = x @ w  (x: (..., K), w: (K, N)).
 
     ``dot`` may be swapped for the Pallas ring-matmul kernel
@@ -179,7 +182,7 @@ def matmul(x: RSS, w: RSS | None, parties: Parties, tag: str = "matmul",
     mod 2^l.  ``w_limbs`` routes through the fused 3-party kernel with
     cached weight limbs instead (w may then be None).
     """
-    z = _matmul_parts(x, w, dot, w_limbs)
+    z = _matmul_parts(x, w, dot, w_limbs, kcfg)
     return _reshare(z, x.ring, parties, tag)
 
 
@@ -207,7 +210,7 @@ def mul_open(x: RSS, y: RSS, parties: Parties, tag: str = "mul_open"):
 
 def matmul_truncate(x: RSS, w: RSS | None, parties: Parties,
                     tag: str = "matmul_tr", dot=None, w_limbs=None,
-                    bias_parts=None) -> RSS:
+                    bias_parts=None, kcfg=None) -> RSS:
     """Fused Alg-2 matmul + Π_trunc in ONE online round (beyond-paper).
 
     The reshare round already moves one ring element per output slot; the
@@ -223,7 +226,7 @@ def matmul_truncate(x: RSS, w: RSS | None, parties: Parties,
     3-party Pallas kernel with cached weight limbs.
     """
     ring = x.ring
-    z = _matmul_parts(x, w, dot, w_limbs)
+    z = _matmul_parts(x, w, dot, w_limbs, kcfg)
     if bias_parts is not None:
         z = z + bias_parts
     return _open_shift(z, parties, ring, ring.frac, tag)
@@ -305,7 +308,7 @@ def _im2col(x, kh: int, kw: int, stride: int, padding: int):
 
 
 def _grouped_conv_parts(x: RSS, w: RSS, stride: int, padding: int,
-                        groups: int, w_limbs=None):
+                        groups: int, w_limbs=None, kcfg=None):
     """Additive per-channel (depthwise) product stack: im2col patches
     contracted against each channel's own kernel, fused-operand Alg 2.
 
@@ -325,7 +328,8 @@ def _grouped_conv_parts(x: RSS, w: RSS, stride: int, padding: int,
     if w_limbs is not None:
         from ..kernels.ops import grouped_rss_matmul_op
         z = grouped_rss_matmul_op(t.own_view(cols4.shares),
-                                  t.next_view(cols4.shares), w_limbs)
+                                  t.next_view(cols4.shares), w_limbs,
+                                  cfg=kcfg)
         return z.reshape(z.shape[0], b, ho, wo, cout)
     # einsum over the patch dim per channel: out[...,c*mult+m]
     slots = t.rss_slots
@@ -344,7 +348,7 @@ def _grouped_conv_parts(x: RSS, w: RSS, stride: int, padding: int,
 
 def conv2d(x: RSS, w: RSS, parties: Parties, stride: int = 1,
            padding: int = 0, groups: int = 1, tag: str = "conv",
-           w_limbs=None) -> RSS:
+           w_limbs=None, kcfg=None) -> RSS:
     """Secure 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin/groups,Cout).
 
     ``w_limbs`` holds the setup-time limb cache: a
@@ -357,8 +361,10 @@ def conv2d(x: RSS, w: RSS, parties: Parties, stride: int = 1,
     if groups == 1:
         cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
         wmat = w.reshape(kh * kw * cin_g, cout)
-        return matmul(cols, wmat, parties, tag=tag, w_limbs=w_limbs)
-    z = _grouped_conv_parts(x, w, stride, padding, groups, w_limbs=w_limbs)
+        return matmul(cols, wmat, parties, tag=tag, w_limbs=w_limbs,
+                      kcfg=kcfg)
+    z = _grouped_conv_parts(x, w, stride, padding, groups, w_limbs=w_limbs,
+                            kcfg=kcfg)
     return _reshare(z, x.ring, parties, tag=tag)
 
 
@@ -373,14 +379,14 @@ def _im2col_rss(x: RSS, kh, kw, stride, padding):
 
 def conv2d_truncate(x: RSS, w: RSS, parties: Parties, stride: int = 1,
                     padding: int = 0, tag: str = "conv_tr", w_limbs=None,
-                    bias_parts=None) -> RSS:
+                    bias_parts=None, kcfg=None) -> RSS:
     """Fused conv (groups=1) + bias + Π_trunc, one online round: im2col then
     `matmul_truncate`."""
     kh, kw, cin_g, cout = (int(d) for d in w.shape)
     cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
     wmat = w.reshape(kh * kw * cin_g, cout)
     return matmul_truncate(cols, wmat, parties, tag=tag, w_limbs=w_limbs,
-                           bias_parts=bias_parts)
+                           bias_parts=bias_parts, kcfg=kcfg)
 
 
 # ---------------------------------------------------------------------------
@@ -416,7 +422,7 @@ class PublicTensor:
 
 def bin_matmul(x: RSS, w: RSS | PublicTensor, parties: Parties,
                tag: str = "bin_matmul", dot=None, w_limbs=None,
-               bias_parts=None, bias_public=None) -> RSS:
+               bias_parts=None, bias_public=None, kcfg=None) -> RSS:
     """Binary-domain secure matmul: x holds post-Sign ±1 activations at
     scale 0, so z = x @ w already sits at the weights' scale f — no
     truncation opening ever rides this layer (DESIGN.md §11).
@@ -441,7 +447,7 @@ def bin_matmul(x: RSS, w: RSS | PublicTensor, parties: Parties,
         comm.record(tag, rounds=0, nbytes=0)
         wl = w.limbs if w_limbs is None else w_limbs
         if wl is not None:
-            z = bin_rss_matmul_op(x.shares, wl)
+            z = bin_rss_matmul_op(x.shares, wl, cfg=kcfg)
         else:
             d = dot or (lambda a, b: _ring_dot(a, b, x.ring))
             z = jnp.stack([d(x.shares[i], w.enc)
@@ -452,7 +458,7 @@ def bin_matmul(x: RSS, w: RSS | PublicTensor, parties: Parties,
         return out
     assert bias_public is None, \
         "shared weights take additive bias_parts, not a public encoding"
-    z = _matmul_parts(x, w, dot, w_limbs)
+    z = _matmul_parts(x, w, dot, w_limbs, kcfg)
     if bias_parts is not None:
         z = z + bias_parts
     return _reshare(z, x.ring, parties, tag)
@@ -461,7 +467,7 @@ def bin_matmul(x: RSS, w: RSS | PublicTensor, parties: Parties,
 def bin_conv2d(x: RSS, w: RSS | PublicTensor, parties: Parties,
                stride: int = 1, padding: int = 0, groups: int = 1,
                tag: str = "bin_conv", w_limbs=None, bias_parts=None,
-               bias_public=None) -> RSS:
+               bias_public=None, kcfg=None) -> RSS:
     """Binary-domain secure conv: im2col + `bin_matmul` (groups == 1) or the
     per-channel grouped contraction (groups == Cin, the depthwise half of a
     sepconv) — either way the post-Sign layer costs one reshare round
@@ -477,7 +483,7 @@ def bin_conv2d(x: RSS, w: RSS | PublicTensor, parties: Parties,
             cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
             wmat = PublicTensor(w.enc.reshape(kh * kw * cin_g, cout), w.limbs)
             return bin_matmul(cols, wmat, parties, tag=tag,
-                              bias_public=bias_public)
+                              bias_public=bias_public, kcfg=kcfg)
         # depthwise: per-channel contraction against the public kernel,
         # on every slot at once — still zero communication
         b = int(x.shape[0])
@@ -490,7 +496,7 @@ def bin_conv2d(x: RSS, w: RSS | PublicTensor, parties: Parties,
         comm.record(tag, rounds=0, nbytes=0)
         if w.limbs is not None:
             from ..kernels.ops import bin_grouped_matmul_op
-            z = bin_grouped_matmul_op(cols5, w.limbs)
+            z = bin_grouped_matmul_op(cols5, w.limbs, cfg=kcfg)
         else:
             wk = w.enc.reshape(kh * kw, cin, mult)
             z = jnp.einsum("sbhwkc,kcm->sbhwcm", cols5, wk,
@@ -508,14 +514,14 @@ def bin_conv2d(x: RSS, w: RSS | PublicTensor, parties: Parties,
         # arithmetic (and PRF draw order) as conv2d's grouped branch, hence
         # bit-identical to the generic route
         z = _grouped_conv_parts(x, w, stride, padding, groups,
-                                w_limbs=w_limbs)
+                                w_limbs=w_limbs, kcfg=kcfg)
         if bias_parts is not None:
             z = z + bias_parts
         return _reshare(z, x.ring, parties, tag=tag)
     cols, ho, wo = _im2col_rss(x, kh, kw, stride, padding)
     wmat = w.reshape(kh * kw * cin_g, cout)
     return bin_matmul(cols, wmat, parties, tag=tag, w_limbs=w_limbs,
-                      bias_parts=bias_parts)
+                      bias_parts=bias_parts, kcfg=kcfg)
 
 
 # ---------------------------------------------------------------------------

@@ -72,6 +72,8 @@ class SecureModel:
     use_kernel: bool = False
     weights: str = "shared"        # "shared" | "public"  (DESIGN.md §11)
     binary_linear: str = "auto"    # "auto" | "generic" | "off"
+    deployment: str | None = None  # descriptor the path solver ran against
+    predicted: Any = None          # cost_model.CostReport from compile time
 
 
 def _fold_bn(spec, params, i):
@@ -84,7 +86,9 @@ def compile_secure(params: dict, net: str, key,
                    ring: RingSpec | None = None,
                    use_kernel_dot: bool = False,
                    weights: str = "shared",
-                   binary_linear: str = "auto") -> SecureModel:
+                   binary_linear: str = "auto",
+                   deployment=None,
+                   autotune_cache=None) -> SecureModel:
     """Model-owner setup: fuse + share (or publish).  `params` are the
     trained plaintext parameters (bnn.py layout).
 
@@ -104,7 +108,18 @@ def compile_secure(params: dict, net: str, key,
     share's unconditional 4).  ``binary_linear`` selects the post-Sign
     routing: "auto" = the binary-domain engine, "generic" = the plain Alg-2
     machinery (bit-identity reference), "off" = binarization-unaware
-    ablation (±1 lifted to scale f, full truncation opening paid)."""
+    ablation (±1 lifted to scale f, full truncation opening paid).
+
+    ``deployment`` (a `cost_model.DeploymentDescriptor` or registry name
+    "local" / "lan" / "wan") switches the path assignment from the fixed
+    preference order to the symbolic cost solver: each linear layer gets
+    the path minimizing predicted time under that link/compute model, and
+    the per-layer prediction rides on the op as ``op["cost"]`` (the whole
+    report on ``model.predicted``).  With ``use_kernel_dot=True`` the
+    solver additionally consults the kernel autotuner's persisted cache
+    (``autotune_cache`` path or the default) and pins the measured-best
+    `KernelConfig` per launch as ``op["kcfg"]`` — both lowerings are
+    bit-exact mod 2^32, so this changes time only, never values."""
     assert weights in WEIGHT_MODES, weights
     assert binary_linear in BINARY_LINEAR_MODES, binary_linear
     # "generic" is the bit-identity reference for the bin-SHARED engine;
@@ -189,9 +204,19 @@ def compile_secure(params: dict, net: str, key,
             ops.append({"op": "flatten"})
         i += 1
     _annotate_binary_paths(ops, weights, binary_linear)
-    return SecureModel(ops=ops, ring=ring, net=net,
-                       use_kernel=use_kernel_dot, weights=weights,
-                       binary_linear=binary_linear)
+    from . import cost_model
+    dep = cost_model.resolve_deployment(deployment)
+    model = SecureModel(ops=ops, ring=ring, net=net,
+                        use_kernel=use_kernel_dot, weights=weights,
+                        binary_linear=binary_linear,
+                        deployment=dep.name if dep else None)
+    # the symbolic solver re-derives every op's path label (ties keep the
+    # fixed preference order, so deployment=None reproduces the legacy
+    # labels exactly), stamps per-layer predicted costs, and pins cached
+    # autotuned kernel configs when the kernel path is on
+    model.predicted = cost_model.annotate_model(model, deployment=dep,
+                                                autotune_cache=autotune_cache)
+    return model
 
 
 def _annotate_binary_paths(ops: list, weights: str = "shared",
@@ -296,6 +321,7 @@ def _infer_linear_shared(h: RSS, op: dict, parties: Parties, idx: int,
     bit-identical to the bin-shared path, kept as its reference."""
     tp = transport.current()
     wlimbs = op.get("wlimbs") or [None] * len(op["w"])
+    kcfgs = op.get("kcfg") or [None] * len(op["w"])
     kind = op["op"]
     if kind == "sepconv":
         # separable: depthwise then pointwise (Alg 2 twice, Fig 3), the
@@ -307,18 +333,19 @@ def _infer_linear_shared(h: RSS, op: dict, parties: Parties, idx: int,
         if binary_in and binary_engine:
             h = bin_conv2d(h, op["w"][0], parties, stride=op["stride"],
                            padding=op["pad"], groups=cin,
-                           tag=f"l{idx}.dwconv.bin", w_limbs=wlimbs[0])
+                           tag=f"l{idx}.dwconv.bin", w_limbs=wlimbs[0],
+                           kcfg=kcfgs[0])
         else:
             h = conv2d(h, op["w"][0], parties, stride=op["stride"],
                        padding=op["pad"], groups=cin, tag=f"l{idx}.dwconv",
-                       w_limbs=wlimbs[0])
+                       w_limbs=wlimbs[0], kcfg=kcfgs[0])
             if not binary_in:
                 h = truncate(h, parties, tag=f"l{idx}.dwtrunc")
         at_2f = True
-        lin, w_rss, wl = "pw", op["w"][1], wlimbs[1]
+        lin, w_rss, wl, kc = "pw", op["w"][1], wlimbs[1], kcfgs[1]
     else:
         at_2f = not binary_in
-        lin, w_rss, wl = kind, op["w"][0], wlimbs[0]
+        lin, w_rss, wl, kc = kind, op["w"][0], wlimbs[0], kcfgs[0]
     if not at_2f and binary_engine:
         # bin-shared engine: scale-f bias rides the additive parts through
         # the single reshare round — 3 ring elements per output slot
@@ -326,10 +353,10 @@ def _infer_linear_shared(h: RSS, op: dict, parties: Parties, idx: int,
             (tp.parts_slots,) + (1,) * (h.ndim - 1) + (-1,))
         if lin == "fc":
             return bin_matmul(h, w_rss, parties, tag=f"l{idx}.fc.bin",
-                              w_limbs=wl, bias_parts=bias)
+                              w_limbs=wl, bias_parts=bias, kcfg=kc)
         return bin_conv2d(h, w_rss, parties, stride=op["stride"],
                           padding=op["pad"], tag=f"l{idx}.conv.bin",
-                          w_limbs=wl, bias_parts=bias)
+                          w_limbs=wl, bias_parts=bias, kcfg=kc)
     if at_2f and fused_rounds():
         # beyond-paper default: product + bias + Π_trunc in the one
         # reshare round (matmul_truncate / conv2d_truncate) — the
@@ -339,20 +366,22 @@ def _infer_linear_shared(h: RSS, op: dict, parties: Parties, idx: int,
         bias = bias * jnp.asarray(ring.scale, ring.dtype)
         if lin == "fc":
             return matmul_truncate(h, w_rss, parties, tag=f"l{idx}.fc",
-                                   w_limbs=wl, bias_parts=bias)
+                                   w_limbs=wl, bias_parts=bias, kcfg=kc)
         if lin == "conv":
             return conv2d_truncate(h, w_rss, parties, stride=op["stride"],
                                    padding=op["pad"], tag=f"l{idx}.conv",
-                                   w_limbs=wl, bias_parts=bias)
+                                   w_limbs=wl, bias_parts=bias, kcfg=kc)
         return conv2d_truncate(h, w_rss, parties, tag=f"l{idx}.pwconv",
-                               w_limbs=wl, bias_parts=bias)
+                               w_limbs=wl, bias_parts=bias, kcfg=kc)
     if lin == "fc":
-        z = matmul(h, w_rss, parties, tag=f"l{idx}.fc", w_limbs=wl)
+        z = matmul(h, w_rss, parties, tag=f"l{idx}.fc", w_limbs=wl, kcfg=kc)
     elif lin == "conv":
         z = conv2d(h, w_rss, parties, stride=op["stride"],
-                   padding=op["pad"], tag=f"l{idx}.conv", w_limbs=wl)
+                   padding=op["pad"], tag=f"l{idx}.conv", w_limbs=wl,
+                   kcfg=kc)
     else:
-        z = conv2d(h, w_rss, parties, tag=f"l{idx}.pwconv", w_limbs=wl)
+        z = conv2d(h, w_rss, parties, tag=f"l{idx}.pwconv", w_limbs=wl,
+                   kcfg=kc)
     # z is a full RSS here, so the bias is added share-wise
     bias = op["b"].shares.reshape(
         (z.shares.shape[0],) + (1,) * (z.ndim - 1) + (-1,))
@@ -375,25 +404,27 @@ def _infer_linear_public(h: RSS, op: dict, parties: Parties, idx: int,
     kind = op["op"]
     lift = jnp.asarray(ring.frac, ring.dtype)
     pub_b = jnp.asarray(op["pub_b"])
+    kcfgs = op.get("kcfg") or [None] * len(op["pub_w"])
     if kind == "sepconv":
         cin = int(h.shape[-1])
         h = bin_conv2d(h, op["pub_w"][0], parties, stride=op["stride"],
-                       padding=op["pad"], groups=cin, tag=f"l{idx}.dwconv.pub")
+                       padding=op["pad"], groups=cin,
+                       tag=f"l{idx}.dwconv.pub", kcfg=kcfgs[0])
         if not binary_in:
             h = truncate(h, parties, tag=f"l{idx}.dwtrunc")
         # pointwise input carries scale f, so the product lands at 2f
         h = bin_conv2d(h, op["pub_w"][1], parties, tag=f"l{idx}.pwconv.pub",
-                       bias_public=pub_b << lift)
+                       bias_public=pub_b << lift, kcfg=kcfgs[1])
         return truncate(h, parties, tag=f"l{idx}.trunc")
     w = op["pub_w"][0]
     bias = pub_b if binary_in else pub_b << lift
     if kind == "fc":
         h = bin_matmul(h, w, parties, tag=f"l{idx}.fc.pub",
-                       bias_public=bias)
+                       bias_public=bias, kcfg=kcfgs[0])
     else:
         h = bin_conv2d(h, w, parties, stride=op["stride"],
                        padding=op["pad"], tag=f"l{idx}.conv.pub",
-                       bias_public=bias)
+                       bias_public=bias, kcfg=kcfgs[0])
     if not binary_in:
         h = truncate(h, parties, tag=f"l{idx}.trunc")
     return h
@@ -435,9 +466,13 @@ def secure_infer(model: SecureModel, x_shares: RSS, parties: Parties,
                 h = _infer_linear_public(h, op, parties, idx, ring,
                                          binary_in)
             else:
+                # the compile-time solver may pin the engine choice per op
+                # (cost_model.annotate_model); absent that, the model-wide
+                # routing mode decides
                 h = _infer_linear_shared(
                     h, op, parties, idx, ring, binary_in,
-                    binary_engine=model.binary_linear == "auto")
+                    binary_engine=op.get(
+                        "engine", model.binary_linear == "auto"))
             prev_sign = False
             pending_sign_threshold = (op.get("sign_threshold")
                                       if model.weights == "shared"

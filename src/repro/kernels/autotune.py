@@ -1,0 +1,318 @@
+"""Kernel autotuner for the RSS matmul families (DESIGN.md §15).
+
+The Pallas kernels in this package historically ran one fixed configuration:
+128-cube blocks, interpret-mode lowering.  That is correct everywhere but
+optimal almost nowhere — on a CPU host the interpreted Pallas grid loop is
+orders of magnitude slower than the XLA reference lowering of the very same
+mod-2^32 integers, and on TPU the best block shape depends on the layer's
+(M, K, N).  This module searches the small discrete space
+
+    lowering ∈ {kernel, ref} × block sizes (bm, bn, bk) dividing the
+    padded operand dims
+
+per (family, shape, limb count, platform), times each candidate on live
+data, and persists the winner in a JSON cache that ``compile_secure``
+consults at model-setup time — the same compile step that solves for the
+protocol path (core/cost_model.py) also picks the kernel config, and the
+chosen `KernelConfig` rides on each op as ``op["kcfg"]``.
+
+Every lowering in the space is bit-exact mod 2^32 (the dispatchers fall
+back between them freely), so tuning can never change results — only time.
+
+Cache format (JSON, ``~/.cache/repro/autotune.json`` or
+``$REPRO_AUTOTUNE_CACHE`` or an explicit path; benchmarks keep one under
+``benchmarks/``)::
+
+    {"version": 1,
+     "entries": {
+       "rss_matmul.m128k896n128.L4.cpu": {
+           "bm": 128, "bn": 128, "bk": 128, "lowering": "ref",
+           "us": 812.4, "default_us": 51234.0, "space": "smoke"},
+       ...}}
+
+Keys are ``<family>.m<Mp>k<Kp>n<Np>[.c<C>].L<limbs>.<platform>`` with the
+dims padded to the 128 MXU tile exactly as the kernels pad them, so one
+entry covers every logical shape that lands on the same padded launch.
+
+CLI smoke mode (CI runs this; bounded space, seconds not minutes)::
+
+    python -m repro.kernels.autotune --smoke --cache benchmarks/autotune_cache.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .bin_rss_matmul import (bin_grouped_matmul_parts, bin_rss_matmul_parts,
+                             grouped_rss_matmul_parts, grouped_weight_limbs,
+                             public_grouped_limbs, public_weight_limbs)
+from .lowering import (DEFAULT_CONFIG, KernelConfig, LOWERING_KERNEL,
+                       LOWERING_REF)
+from .rss_matmul import precompute_weight_limbs, rss_matmul_parts
+
+__all__ = ["KernelConfig", "DEFAULT_CONFIG", "FAMILIES", "default_cache_path",
+           "load_cache", "lookup", "autotune", "ensure_tuned", "cache_key"]
+
+_TILE = 128
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_VERSION = 1
+
+# Dense families search (bm, bn, bk); grouped families search bm only
+# (K = kh·kw stays whole inside a block — see bin_rss_matmul.py).
+FAMILIES = ("rss_matmul", "bin_rss_matmul",
+            "grouped_rss_matmul", "bin_grouped_matmul")
+_GROUPED = ("grouped_rss_matmul", "bin_grouped_matmul")
+
+_BLOCKS = (128, 256, 512)
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def _pad(d: int) -> int:
+    return d + (-d) % _TILE
+
+
+def cache_key(family: str, m: int, k: int, n: int, *, n_limbs: int = 4,
+              channels: int | None = None,
+              platform: str | None = None) -> str:
+    """Cache key for a logical (family, shape, limbs, platform) launch."""
+    assert family in FAMILIES, family
+    platform = platform or jax.default_backend()
+    if family in _GROUPED:
+        # grouped: only M is tile-padded; K/N stay whole in-block
+        return (f"{family}.m{_pad(m)}k{k}n{n}.c{channels or 1}"
+                f".L{n_limbs}.{platform}")
+    return f"{family}.m{_pad(m)}k{_pad(k)}n{_pad(n)}.L{n_limbs}.{platform}"
+
+
+# ---------------------------------------------------------------------------
+# Cache IO
+# ---------------------------------------------------------------------------
+
+_CACHE_MEM: dict[str, dict] = {}
+
+
+def load_cache(path: Path | str | None = None, *, refresh: bool = False) -> dict:
+    """Load (and memoize) the entry dict of a cache file; {} if absent."""
+    p = Path(path) if path is not None else default_cache_path()
+    key = str(p)
+    if not refresh and key in _CACHE_MEM:
+        return _CACHE_MEM[key]
+    entries: dict = {}
+    if p.exists():
+        try:
+            data = json.loads(p.read_text())
+            if isinstance(data, dict):
+                entries = data.get("entries", {})
+        except (json.JSONDecodeError, OSError):
+            entries = {}  # corrupt cache == cold cache, never fatal
+    _CACHE_MEM[key] = entries
+    return entries
+
+
+def _save_cache(entries: dict, path: Path | str | None = None) -> Path:
+    p = Path(path) if path is not None else default_cache_path()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps({"version": CACHE_VERSION,
+                             "entries": dict(sorted(entries.items()))},
+                            indent=1))
+    _CACHE_MEM[str(p)] = entries
+    return p
+
+
+def lookup(family: str, m: int, k: int, n: int, *, n_limbs: int = 4,
+           channels: int | None = None,
+           path: Path | str | None = None) -> KernelConfig | None:
+    """Best known config for a launch, or None on cache miss (callers fall
+    back to `DEFAULT_CONFIG` behavior)."""
+    entry = load_cache(path).get(
+        cache_key(family, m, k, n, n_limbs=n_limbs, channels=channels))
+    if not entry:
+        return None
+    return KernelConfig(bm=int(entry["bm"]), bn=int(entry["bn"]),
+                        bk=int(entry["bk"]), lowering=str(entry["lowering"]))
+
+
+# ---------------------------------------------------------------------------
+# Candidate space + timing
+# ---------------------------------------------------------------------------
+
+def _divisor_blocks(dim: int) -> list[int]:
+    out = [b for b in _BLOCKS if dim % b == 0]
+    return out or [min(dim, _TILE)]
+
+
+def candidate_space(family: str, m: int, k: int, n: int, *,
+                    smoke: bool = False) -> list[KernelConfig]:
+    """Search space for one launch.  ``smoke`` keeps CI to ≤4 candidates:
+    the fixed default, the largest divisor block, and the reference."""
+    if family in _GROUPED:
+        bms = _divisor_blocks(_pad(m))
+        cands = [KernelConfig(bm=bm, bn=128, bk=128) for bm in bms]
+    else:
+        mp, kp, np_ = _pad(m), _pad(k), _pad(n)
+        if smoke:
+            big = KernelConfig(bm=max(_divisor_blocks(mp)),
+                               bn=max(_divisor_blocks(np_)),
+                               bk=max(_divisor_blocks(kp)))
+            cands = [DEFAULT_CONFIG, big]
+        else:
+            cands = [KernelConfig(bm=bm, bn=bn, bk=bk)
+                     for bm in _divisor_blocks(mp)
+                     for bn in _divisor_blocks(np_)
+                     for bk in _divisor_blocks(kp)]
+    cands.append(KernelConfig(lowering=LOWERING_REF))
+    seen, uniq = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            uniq.append(c)
+    return uniq
+
+
+def _time_us(fn, iters: int) -> float:
+    jax.block_until_ready(fn())  # compile + warmup
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _operands(family: str, m: int, k: int, n: int, *, n_limbs: int,
+              channels: int | None):
+    """Random uniform-ring operands for one family (shares are uniform mod
+    2^32; public encodings are bounded to keep the requested limb count)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    u32 = lambda key, shape: jax.random.bits(key, shape, jnp.uint32)
+    if family == "rss_matmul":
+        x = u32(kx, (3, m, k))
+        w = precompute_weight_limbs(u32(kw, (3, k, n)))
+        return lambda cfg: rss_matmul_parts(x, w, cfg=cfg)
+    if family == "bin_rss_matmul":
+        x = u32(kx, (3, m, k))
+        bound = jnp.uint32(1) << jnp.uint32(8 * n_limbs - 2)
+        w = public_weight_limbs(u32(kw, (k, n)) % bound, n_limbs=n_limbs)
+        return lambda cfg: bin_rss_matmul_parts(x, w, cfg=cfg)
+    c = channels or 1
+    if family == "grouped_rss_matmul":
+        x = u32(kx, (3, c, m, k))
+        w = grouped_weight_limbs(u32(kw, (3, c, k, n)))
+        return lambda cfg: grouped_rss_matmul_parts(x, w, cfg=cfg)
+    if family == "bin_grouped_matmul":
+        x = u32(kx, (3, c, m, k))
+        bound = jnp.uint32(1) << jnp.uint32(8 * n_limbs - 2)
+        w = public_grouped_limbs(u32(kw, (c, k, n)) % bound, n_limbs=n_limbs)
+        return lambda cfg: bin_grouped_matmul_parts(x, w, cfg=cfg)
+    raise ValueError(f"unknown kernel family {family!r}")
+
+
+def autotune(family: str, m: int, k: int, n: int, *, n_limbs: int = 4,
+             channels: int | None = None, iters: int = 2,
+             smoke: bool = False, cache_path: Path | str | None = None,
+             force: bool = False) -> tuple[KernelConfig, dict[KernelConfig, float]]:
+    """Time every candidate for one launch, persist and return the winner.
+
+    Returns ``(best_config, {config: microseconds})``.  Cached results are
+    returned without re-timing unless ``force``.  The fixed default config
+    is always in the measured set, so the cache entry records both ``us``
+    (winner) and ``default_us`` — the speedup benchmarks report."""
+    key = cache_key(family, m, k, n, n_limbs=n_limbs, channels=channels)
+    entries = load_cache(cache_path)
+    if not force and key in entries:
+        e = entries[key]
+        cfg = KernelConfig(bm=int(e["bm"]), bn=int(e["bn"]), bk=int(e["bk"]),
+                           lowering=str(e["lowering"]))
+        return cfg, {cfg: float(e["us"]),
+                     DEFAULT_CONFIG: float(e.get("default_us", e["us"]))}
+
+    run = _operands(family, m, k, n, n_limbs=n_limbs, channels=channels)
+    timings: dict[KernelConfig, float] = {}
+    for cfg in candidate_space(family, m, k, n, smoke=smoke):
+        timings[cfg] = _time_us(lambda cfg=cfg: run(cfg), iters)
+    best = min(timings, key=timings.get)
+    entries[key] = {"bm": best.bm, "bn": best.bn, "bk": best.bk,
+                    "lowering": best.lowering,
+                    "us": round(timings[best], 3),
+                    "default_us": round(timings.get(
+                        DEFAULT_CONFIG, timings[best]), 3),
+                    "space": "smoke" if smoke else "full"}
+    _save_cache(entries, cache_path)
+    return best, timings
+
+
+def ensure_tuned(requests: Iterable[Sequence], *, iters: int = 2,
+                 smoke: bool = True,
+                 cache_path: Path | str | None = None) -> int:
+    """Tune every launch in ``requests`` that misses the cache.
+
+    Each request is ``(family, m, k, n, n_limbs, channels)`` — the tuple
+    `core.cost_model.kernel_requests` emits per linear op.  Returns the
+    number of launches actually timed."""
+    tuned = 0
+    done: set[str] = set()
+    for family, m, k, n, n_limbs, channels in requests:
+        key = cache_key(family, m, k, n, n_limbs=n_limbs, channels=channels)
+        if key in done:
+            continue
+        done.add(key)
+        if lookup(family, m, k, n, n_limbs=n_limbs, channels=channels,
+                  path=cache_path) is None:
+            autotune(family, m, k, n, n_limbs=n_limbs, channels=channels,
+                     iters=iters, smoke=smoke, cache_path=cache_path)
+            tuned += 1
+    return tuned
+
+
+# ---------------------------------------------------------------------------
+# CLI — CI's bounded smoke entry point
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Autotune the RSS matmul kernel families")
+    ap.add_argument("--smoke", action="store_true",
+                    help="bounded candidate space (CI mode)")
+    ap.add_argument("--cache", default=None,
+                    help="cache JSON path (default: "
+                         f"$%s or ~/.cache/repro/autotune.json)" % CACHE_ENV)
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--k", type=int, default=256)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--force", action="store_true",
+                    help="re-time even on cache hit")
+    args = ap.parse_args(argv)
+
+    shapes = [("rss_matmul", args.m, args.k, args.n, 4, None),
+              ("bin_rss_matmul", args.m, args.k, args.n, 3, None),
+              ("grouped_rss_matmul", args.m, 9, 1, 4, 16),
+              ("bin_grouped_matmul", args.m, 9, 1, 1, 16)]
+    for family, m, k, n, n_limbs, channels in shapes:
+        best, timings = autotune(
+            family, m, k, n, n_limbs=n_limbs, channels=channels,
+            iters=args.iters, smoke=args.smoke, cache_path=args.cache,
+            force=args.force)
+        print(f"[autotune] {cache_key(family, m, k, n, n_limbs=n_limbs, channels=channels)}")
+        for cfg, us in sorted(timings.items(), key=lambda kv: kv[1]):
+            mark = " <- best" if cfg == best else ""
+            print(f"    {cfg.describe():<32} {us:12.1f} us{mark}")
+    path = Path(args.cache) if args.cache else default_cache_path()
+    print(f"[autotune] cache: {path} ({len(load_cache(path))} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from .limbs import N_LIMBS, balanced_limbs
+from .lowering import KernelConfig, LOWERING_REF, resolve_interpret
 
 __all__ = ["PublicWeightLimbs", "public_weight_limbs", "bin_rss_matmul",
            "bin_rss_matmul_ref", "bin_rss_matmul_parts",
@@ -184,13 +185,15 @@ def _bin_rss_matmul_call(xl, wl, *, bm, bn, bk, interpret):
 
 def bin_rss_matmul(x_stack: jax.Array, weights: PublicWeightLimbs, *,
                    bm: int = 128, bn: int = 128, bk: int = 128,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool | None = None) -> jax.Array:
     """Every held share slot's local product with a public weight matrix.
 
     x_stack: (S, M, K) uint32 share stack (S = 3 stacked sim / 2 per-party
     pair).  Returns (S, M, N) uint32 with z_s = x_s @ W mod 2^32 — a valid
     RSS stack of x @ W with no communication.  Handles non-tile-aligned
-    M/K/N by zero padding."""
+    M/K/N by zero padding.  ``interpret=None`` resolves to the platform
+    default (compiled on TPU, interpreter elsewhere)."""
+    interpret = resolve_interpret(interpret)
     s, m, k = x_stack.shape
     assert k == weights.k, (x_stack.shape, weights.w.shape)
     xp = _pad_axis(_pad_axis(x_stack, _TILE, 1), _TILE, 2)
@@ -214,13 +217,22 @@ def bin_rss_matmul_ref(x_stack: jax.Array,
 
 def bin_rss_matmul_parts(x_stack: jax.Array, weights: PublicWeightLimbs, *,
                          min_dim: int = 8,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool | None = None,
+                         cfg: KernelConfig | None = None) -> jax.Array:
     """Kernel dispatch with the small-shape fallback used across kernels/:
-    both paths are exact mod 2^32, so results are bit-identical."""
+    both paths are exact mod 2^32, so results are bit-identical.
+
+    ``cfg`` (an autotuned `KernelConfig`) overrides the fixed defaults:
+    ``lowering="ref"`` forces the XLA reference path, otherwise its block
+    sizes replace the 128-cube default."""
     _, m, k = x_stack.shape
+    if cfg is not None and cfg.lowering == LOWERING_REF:
+        return bin_rss_matmul_ref(x_stack, weights)
     if min(m, k, weights.n) < min_dim:
         return bin_rss_matmul_ref(x_stack, weights)
-    return bin_rss_matmul(x_stack, weights, interpret=interpret)
+    bm, bn, bk = (cfg.bm, cfg.bn, cfg.bk) if cfg is not None else (128, 128, 128)
+    return bin_rss_matmul(x_stack, weights, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -391,7 +403,8 @@ def grouped_rss_matmul_ref(x_stack: jax.Array, weights: GroupedWeightLimbs,
 def grouped_rss_matmul_parts(x_stack: jax.Array, weights: GroupedWeightLimbs,
                              *, x_next_stack: jax.Array | None = None,
                              bm: int = 128, min_dim: int = 8,
-                             interpret: bool = True) -> jax.Array:
+                             interpret: bool | None = None,
+                             cfg: KernelConfig | None = None) -> jax.Array:
     """All parties' additive grouped products, one kernel launch.
 
     x_stack: (S, C, M, K) uint32 per-channel activation shares (S = 3
@@ -399,10 +412,15 @@ def grouped_rss_matmul_parts(x_stack: jax.Array, weights: GroupedWeightLimbs,
     z_i[c] = x_i[c]·(w_i[c]+w_{i+1}[c]) + x_{i+1}[c]·w_i[c] — the grouped
     fused-operand Alg-2 identity, bit-exact mod 2^32.  Shapes below the
     tiling threshold fall back to the batched-dot reference (identical
-    integers)."""
+    integers).  An autotuned ``cfg`` overrides ``bm`` (the only searched
+    block axis here — K stays whole in-block) or forces the reference."""
     s, c, m, k = x_stack.shape
     assert (c, k) == (weights.channels, weights.k), \
         (x_stack.shape, weights.ws.shape)
+    if cfg is not None:
+        if cfg.lowering == LOWERING_REF:
+            return grouped_rss_matmul_ref(x_stack, weights, x_next_stack)
+        bm = cfg.bm
     if m < min_dim:
         return grouped_rss_matmul_ref(x_stack, weights, x_next_stack)
     xp = _pad_axis(x_stack, _TILE, 2)
@@ -415,7 +433,7 @@ def grouped_rss_matmul_parts(x_stack: jax.Array, weights: GroupedWeightLimbs,
         bl = lim(both)
         xl, xnl = bl[:s], bl[s:]
     out = _grouped_shared_call(xl, xnl, weights.wl, weights.wfl, bm=bm,
-                               interpret=interpret)
+                               interpret=resolve_interpret(interpret))
     return out[:, :, :m, :]
 
 
@@ -477,7 +495,8 @@ def bin_grouped_matmul_ref(x_stack: jax.Array,
 
 def bin_grouped_matmul_parts(x_stack: jax.Array, weights: PublicGroupedLimbs,
                              *, bm: int = 128, min_dim: int = 8,
-                             interpret: bool = True) -> jax.Array:
+                             interpret: bool | None = None,
+                             cfg: KernelConfig | None = None) -> jax.Array:
     """Every held slot's local grouped product with a public depthwise
     kernel: z_s[c] = x_s[c] @ W[c] mod 2^32 — zero communication, and the
     public limb collapse cuts the per-cell dots to Σ_{q<L}(4−q) like the
@@ -485,9 +504,14 @@ def bin_grouped_matmul_parts(x_stack: jax.Array, weights: PublicGroupedLimbs,
     s, c, m, k = x_stack.shape
     assert (c, k) == (weights.channels, weights.k), \
         (x_stack.shape, weights.w.shape)
+    if cfg is not None:
+        if cfg.lowering == LOWERING_REF:
+            return bin_grouped_matmul_ref(x_stack, weights)
+        bm = cfg.bm
     if m < min_dim:
         return bin_grouped_matmul_ref(x_stack, weights)
     xp = _pad_axis(x_stack, _TILE, 2)
     xl = balanced_limbs(xp).transpose(1, 0, 2, 3, 4)
-    out = _grouped_public_call(xl, weights.wl, bm=bm, interpret=interpret)
+    out = _grouped_public_call(xl, weights.wl, bm=bm,
+                               interpret=resolve_interpret(interpret))
     return out[:, :, :m, :]

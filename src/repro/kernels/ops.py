@@ -15,6 +15,7 @@ from .bin_rss_matmul import (GroupedWeightLimbs, PublicGroupedLimbs,
                              bin_rss_matmul_parts, grouped_rss_matmul_parts)
 from .binary_matmul import binary_binary_matmul, binary_weight_matmul
 from .flash_attention import flash_attention
+from .lowering import KernelConfig
 from .ring_matmul import ring_matmul
 from .rss_matmul import WeightLimbs, precompute_weight_limbs, rss_matmul_parts
 
@@ -91,7 +92,8 @@ def rss_matmul_dot(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def bin_rss_matmul_op(x_stack: jax.Array,
-                      weights: PublicWeightLimbs) -> jax.Array:
+                      weights: PublicWeightLimbs,
+                      cfg: KernelConfig | None = None) -> jax.Array:
     """Local share-stack product with a PUBLIC weight matrix (binary-domain
     engine, DESIGN.md §11): z_s = x_s @ W for every share slot the caller
     holds — no communication, no neighbour operand, and the public limb
@@ -102,7 +104,7 @@ def bin_rss_matmul_op(x_stack: jax.Array,
     s = x_stack.shape[0]
     lead = x_stack.shape[1:-1]
     x2 = x_stack.reshape(s, -1, x_stack.shape[-1])
-    out = bin_rss_matmul_parts(x2, weights)
+    out = bin_rss_matmul_parts(x2, weights, cfg=cfg)
     return out.reshape((s,) + lead + (weights.n,))
 
 
@@ -120,7 +122,8 @@ def _unfold_grouped(out: jax.Array, lead, n: int):
 
 
 def grouped_rss_matmul_op(x_stack: jax.Array, x_next_stack: jax.Array,
-                          weights: GroupedWeightLimbs) -> jax.Array:
+                          weights: GroupedWeightLimbs,
+                          cfg: KernelConfig | None = None) -> jax.Array:
     """Depthwise (grouped) additive-product stack from one kernel launch.
 
     x_stack / x_next_stack: (S, ..., K, C) per-channel patch stacks (K =
@@ -138,23 +141,25 @@ def grouped_rss_matmul_op(x_stack: jax.Array, x_next_stack: jax.Array,
         w_own = GroupedWeightLimbs(*(t.own_view(a) for a in weights))
         xn = _fold_grouped(x_next_stack)
     out = grouped_rss_matmul_parts(_fold_grouped(x_stack), w_own,
-                                   x_next_stack=xn)
+                                   x_next_stack=xn, cfg=cfg)
     return _unfold_grouped(out, lead, weights.n)
 
 
 def bin_grouped_matmul_op(x_stack: jax.Array,
-                          weights: PublicGroupedLimbs) -> jax.Array:
+                          weights: PublicGroupedLimbs,
+                          cfg: KernelConfig | None = None) -> jax.Array:
     """Local per-channel product with a PUBLIC depthwise kernel (bin-public
     path): z_s[c] = x_s[c] @ W[c] for every held slot — zero communication,
     adaptive public limb collapse.  x_stack: (S, ..., K, C) patch stack;
     returns (S, ..., C, N)."""
     lead = x_stack.shape[1:-2]
-    out = bin_grouped_matmul_parts(_fold_grouped(x_stack), weights)
+    out = bin_grouped_matmul_parts(_fold_grouped(x_stack), weights, cfg=cfg)
     return _unfold_grouped(out, lead, weights.n)
 
 
 def rss_matmul_parts_op(x_stack: jax.Array, x_next_stack: jax.Array,
-                        weights: WeightLimbs) -> jax.Array:
+                        weights: WeightLimbs,
+                        cfg: KernelConfig | None = None) -> jax.Array:
     """Full 3-party additive-product stack from one fused kernel launch.
 
     x_stack / x_next_stack: (S, ..., K) uint32 share stacks in additive
@@ -174,5 +179,5 @@ def rss_matmul_parts_op(x_stack: jax.Array, x_next_stack: jax.Array,
     else:
         w_own = WeightLimbs(*(t.own_view(a) for a in weights))
         xn2 = x_next_stack.reshape(s, -1, x_next_stack.shape[-1])
-    out = rss_matmul_parts(x2, w_own, x_next_stack=xn2)
+    out = rss_matmul_parts(x2, w_own, x_next_stack=xn2, cfg=cfg)
     return out.reshape((s,) + lead + (weights.n,))

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .limbs import N_LIMBS, balanced_limbs
+from .lowering import KernelConfig, LOWERING_REF, resolve_interpret
 
 __all__ = ["WeightLimbs", "precompute_weight_limbs", "rss_matmul",
            "rss_matmul_parts", "rss_matmul_parts_ref"]
@@ -180,7 +181,7 @@ def _rss_matmul_call(xl, xnl, wl, wfl, *, bm, bn, bk, interpret):
 def rss_matmul(x_stack: jax.Array, weights: WeightLimbs, *,
                x_next_stack: jax.Array | None = None, bm: int = 128,
                bn: int = 128, bk: int = 128,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """All parties' additive products in one kernel launch.
 
     x_stack: (S, M, K) uint32 activation-share stack (S = 3 stacked sim /
@@ -189,7 +190,9 @@ def rss_matmul(x_stack: jax.Array, weights: WeightLimbs, *,
     party-axis roll of x_stack (stacked simulation).
     Returns (S, M, N) uint32 with z_i = x_i·(w_i+w_{i+1}) + x_{i+1}·w_i.
     Handles non-tile-aligned M/K/N by zero padding (zero rows/cols
-    contribute zero mod 2^32)."""
+    contribute zero mod 2^32).  ``interpret=None`` resolves to the
+    platform default (compiled on TPU, interpreter elsewhere)."""
+    interpret = resolve_interpret(interpret)
     s, m, k = x_stack.shape
     assert k == weights.k, (x_stack.shape, weights.ws.shape)
     if x_next_stack is None:
@@ -226,11 +229,19 @@ def rss_matmul_parts_ref(x_stack: jax.Array, weights: WeightLimbs,
 
 def rss_matmul_parts(x_stack: jax.Array, weights: WeightLimbs, *,
                      x_next_stack: jax.Array | None = None,
-                     min_dim: int = 8, interpret: bool = True) -> jax.Array:
+                     min_dim: int = 8, interpret: bool | None = None,
+                     cfg: KernelConfig | None = None) -> jax.Array:
     """Kernel dispatch with the small-shape fallback used across kernels/:
-    both paths are exact mod 2^32, so results are bit-identical."""
+    both paths are exact mod 2^32, so results are bit-identical.
+
+    ``cfg`` (an autotuned `KernelConfig`) overrides the fixed defaults:
+    ``lowering="ref"`` forces the XLA reference path, otherwise its block
+    sizes replace the 128-cube default."""
     _, m, k = x_stack.shape
+    if cfg is not None and cfg.lowering == LOWERING_REF:
+        return rss_matmul_parts_ref(x_stack, weights, x_next_stack)
     if min(m, k, weights.n) < min_dim:
         return rss_matmul_parts_ref(x_stack, weights, x_next_stack)
+    bm, bn, bk = (cfg.bm, cfg.bn, cfg.bk) if cfg is not None else (128, 128, 128)
     return rss_matmul(x_stack, weights, x_next_stack=x_next_stack,
-                      interpret=interpret)
+                      bm=bm, bn=bn, bk=bk, interpret=interpret)

@@ -56,7 +56,7 @@ import time
 
 
 def build(net: str, use_kernel: bool, weights: str = "shared",
-          binary_linear: str = "auto"):
+          binary_linear: str = "auto", deployment=None):
     import jax
     from repro.core import RING32
     from repro.core.secure_model import compile_secure
@@ -65,7 +65,8 @@ def build(net: str, use_kernel: bool, weights: str = "shared",
     params = bnn.init_bnn(jax.random.PRNGKey(0), net)
     model = compile_secure(params, net, jax.random.PRNGKey(1), RING32,
                            use_kernel_dot=use_kernel, weights=weights,
-                           binary_linear=binary_linear)
+                           binary_linear=binary_linear,
+                           deployment=deployment)
     return model
 
 
@@ -244,6 +245,11 @@ def main():
                     help="post-Sign linear routing (DESIGN.md §11): the "
                          "binary-domain engine, the generic Alg-2 "
                          "reference, or the binarization-unaware ablation")
+    ap.add_argument("--deployment", default=None, metavar="NAME",
+                    help="deployment descriptor the protocol-path solver "
+                         "optimizes for (DESIGN.md §15): lan, wan, or "
+                         "local; default keeps the lexicographic "
+                         "(bytes, rounds) assignment")
     ap.add_argument("--offline", choices=("inline", "pool"),
                     default="inline",
                     help="preprocessing phase (DESIGN.md §12): draw "
@@ -267,7 +273,7 @@ def main():
 
     import jax
     import numpy as np
-    from repro.core import RING32, comm, share
+    from repro.core import RING32, comm, cost_model, share
     from repro.core.integrity import IntegrityError, verify_model_ingest
     from repro.core.randomness import Parties
     from repro.core.secure_model import secure_infer_cost
@@ -278,6 +284,10 @@ def main():
     if args.net not in INPUT_SHAPES:
         ap.error(f"unknown --net {args.net!r}; available: "
                  + ", ".join(sorted(INPUT_SHAPES)))
+    if args.deployment is not None \
+            and args.deployment.lower() not in cost_model.DEPLOYMENTS:
+        ap.error(f"unknown --deployment {args.deployment!r}; available: "
+                 + ", ".join(sorted(cost_model.DEPLOYMENTS)))
     if args.batch < 1:
         ap.error(f"--batch must be >= 1, got {args.batch}")
     if args.queries < 1:
@@ -293,8 +303,20 @@ def main():
     pool_depth = args.pool_depth if args.pool_depth is not None else 8
 
     shape = INPUT_SHAPES[args.net]
+    deployment = None
+    if args.deployment is not None:
+        deployment = cost_model.resolve_deployment(
+            args.deployment).with_batch(args.batch)
     model = build(args.net, not args.no_kernel, args.weights,
-                  args.binary_linear)
+                  args.binary_linear, deployment=deployment)
+    if deployment is not None:
+        rep = model.predicted
+        print(f"[serve_secure] path solver ({deployment.name}): "
+              + ", ".join(f"{e.name}={e.path}" for e in rep.entries
+                          if e.name.startswith("l")))
+        print(f"[serve_secure] predicted online: {rep.rounds} rounds, "
+              f"{rep.nbytes / 1e6:.3f} MB, "
+              f"{rep.time(deployment) * 1e3:.1f} ms/query")
     if args.verify == "full":
         # structural RSS pair-consistency check on the ingested shares
         verify_model_ingest(model)
@@ -302,6 +324,15 @@ def main():
               f"({len(model.ops)} layers)")
 
     led = secure_infer_cost(model, (args.batch,) + shape)
+    # symbolic model vs live ledger: byte-exact by construction (§15) —
+    # a mismatch means the cost table drifted from the protocol stack
+    pred = cost_model.model_cost(model, (args.batch,) + shape)
+    pred_ok = (pred.rounds, pred.nbytes) == (led.rounds, led.nbytes)
+    print(f"[serve_secure] cost model: predicted {pred.rounds} rounds / "
+          f"{pred.nbytes:,} B vs measured {led.rounds} / {led.nbytes:,} B "
+          f"-> {'exact' if pred_ok else 'MISMATCH'}")
+    if not pred_ok:
+        raise SystemExit("cost-model prediction diverged from the ledger")
     parties = Parties.setup(jax.random.PRNGKey(args.seed + 7))
 
     rng = np.random.default_rng(args.seed)
@@ -310,8 +341,10 @@ def main():
 
     stats = {"net": args.net, "backend": args.backend, "batch": args.batch,
              "weights": args.weights, "offline": args.offline,
-             "verify": args.verify,
-             "comm_mb_per_query": led.megabytes, "rounds": led.rounds}
+             "verify": args.verify, "deployment": args.deployment,
+             "comm_mb_per_query": led.megabytes, "rounds": led.rounds,
+             "predicted_rounds": pred.rounds,
+             "predicted_bytes": pred.nbytes}
 
     try:
         if args.offline == "pool":

@@ -1,0 +1,117 @@
+"""Kernel autotuner (DESIGN.md §15): cache semantics + bit-exact search.
+
+Every config in the search space lowers the same mod-2^32 arithmetic, so
+tuning can only ever change time — these tests pin the cache key / JSON
+roundtrip contract `compile_secure` relies on, and that the measured
+winner is value-identical to the fixed default config.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels.lowering import (DEFAULT_CONFIG, KernelConfig,
+                                    LOWERING_REF, resolve_interpret)
+from repro.kernels.rss_matmul import precompute_weight_limbs, rss_matmul_parts
+
+
+def test_cache_key_padding():
+    plat = jax.default_backend()
+    # dense: every dim padded to the 128 tile, exactly as the kernel pads
+    assert autotune.cache_key("rss_matmul", 8, 784, 10) == \
+        f"rss_matmul.m128k896n128.L4.{plat}"
+    assert autotune.cache_key("rss_matmul", 128, 896, 128) == \
+        autotune.cache_key("rss_matmul", 8, 784, 10)
+    # grouped: only M padded, K/N stay whole in-block, channels in the key
+    assert autotune.cache_key("grouped_rss_matmul", 100, 9, 1,
+                              channels=16) == \
+        f"grouped_rss_matmul.m128k9n1.c16.L4.{plat}"
+    with pytest.raises(AssertionError):
+        autotune.cache_key("not_a_family", 8, 8, 8)
+
+
+def test_cache_roundtrip(tmp_path):
+    p = tmp_path / "cache.json"
+    assert autotune.load_cache(p, refresh=True) == {}
+    assert autotune.lookup("rss_matmul", 8, 8, 8, path=p) is None
+    key = autotune.cache_key("rss_matmul", 8, 8, 8)
+    autotune._save_cache({key: {"bm": 256, "bn": 128, "bk": 128,
+                                "lowering": "ref", "us": 1.0,
+                                "default_us": 2.0, "space": "smoke"}}, p)
+    data = json.loads(p.read_text())
+    assert data["version"] == autotune.CACHE_VERSION
+    cfg = autotune.lookup("rss_matmul", 8, 8, 8, path=p)
+    assert cfg == KernelConfig(bm=256, bn=128, bk=128, lowering="ref")
+    # the padded key makes one entry cover every same-launch logical shape
+    assert autotune.lookup("rss_matmul", 100, 100, 100, path=p) == cfg
+    assert autotune.lookup("rss_matmul", 256, 8, 8, path=p) is None
+
+
+def test_corrupt_cache_is_cold_not_fatal(tmp_path):
+    p = tmp_path / "cache.json"
+    p.write_text("{not json")
+    assert autotune.load_cache(p, refresh=True) == {}
+    assert autotune.lookup("rss_matmul", 8, 8, 8, path=p) is None
+
+
+def test_candidate_space():
+    cands = autotune.candidate_space("rss_matmul", 256, 256, 256, smoke=True)
+    assert DEFAULT_CONFIG in cands
+    assert KernelConfig(bm=256, bn=256, bk=256) in cands
+    assert KernelConfig(lowering=LOWERING_REF) in cands
+    assert len(cands) == len(set(cands)) <= 4  # CI-bounded
+    full = autotune.candidate_space("rss_matmul", 256, 256, 256)
+    assert set(cands) <= set(full) and len(full) == 9  # 2^3 blocks + ref
+    grouped = autotune.candidate_space("grouped_rss_matmul", 256, 9, 1)
+    assert KernelConfig(lowering=LOWERING_REF) in grouped
+    assert all(c.bn == 128 and c.bk == 128 for c in grouped
+               if c.lowering != LOWERING_REF)
+
+
+def test_autotune_smoke_persists_and_rehits(tmp_path):
+    p = tmp_path / "cache.json"
+    best, timings = autotune.autotune("rss_matmul", 8, 8, 8, iters=1,
+                                      smoke=True, cache_path=p)
+    assert best in timings and DEFAULT_CONFIG in timings
+    entry = json.loads(p.read_text())["entries"][
+        autotune.cache_key("rss_matmul", 8, 8, 8)]
+    assert entry["lowering"] in ("kernel", "ref")
+    assert entry["us"] <= entry["default_us"]
+    # second call is a pure cache hit: no re-timing, same winner
+    before = p.read_text()
+    best2, _ = autotune.autotune("rss_matmul", 8, 8, 8, iters=1,
+                                 smoke=True, cache_path=p)
+    assert best2 == best and p.read_text() == before
+
+
+def test_ensure_tuned_dedups_and_skips_hits(tmp_path):
+    p = tmp_path / "cache.json"
+    reqs = [("rss_matmul", 8, 8, 8, 4, None),
+            ("rss_matmul", 100, 100, 100, 4, None)]  # same padded launch
+    assert autotune.ensure_tuned(reqs, iters=1, smoke=True, cache_path=p) == 1
+    assert autotune.ensure_tuned(reqs, iters=1, smoke=True, cache_path=p) == 0
+
+
+def test_search_space_is_bit_exact():
+    """Every candidate lowering computes identical mod-2^32 values."""
+    m = k = n = 128
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.bits(kx, (3, m, k), jnp.uint32)
+    w = precompute_weight_limbs(jax.random.bits(kw, (3, k, n), jnp.uint32))
+    outs = [np.asarray(rss_matmul_parts(x, w, cfg=cfg))
+            for cfg in autotune.candidate_space("rss_matmul", m, k, n,
+                                                smoke=True)]
+    for o in outs[1:]:
+        assert np.array_equal(o, outs[0])
+
+
+def test_resolve_interpret_platform_default():
+    """Satellite: interpret-vs-compiled defaults are platform-aware —
+    compiled on TPU, interpret elsewhere; explicit wins always."""
+    on_tpu = jax.default_backend() == "tpu"
+    assert resolve_interpret(None) == (not on_tpu)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
