@@ -354,4 +354,8 @@ def secure_e2e():
         rows.extend(_compiled_rows(net, batch))
     for net in COMM_NETS:
         rows.extend(_comm_rows(net))
+    # secure LM serving rows (DESIGN.md §16): measured decode/prefill
+    # tokens/sec + per-token comm, customized vs softmax
+    from . import secure_lm
+    rows.extend(secure_lm.lm_rows())
     return rows

@@ -484,3 +484,151 @@ def annotate_model(model, input_shape=None, *, deployment=None,
     writes the solved path / engine / cost / kernel config onto each op."""
     return model_cost(model, input_shape, deployment=deployment, fused=fused,
                       stamp=True, autotune_cache=autotune_cache)
+
+
+# ---------------------------------------------------------------------------
+# Attention-path closed forms (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+# The transformer/LM serving path composes a different op set than the BNN
+# zoo walk above: Newton iterations, the exp ladder, tournament max, the
+# ReLU-attention customization.  Same contract: every formula below is
+# pinned byte-exact against the live CommLedger (tests/test_cost_model.py),
+# including the offline (preprocessing) phase of every MSB site.
+#
+# All functions take the element count `n` (output numel including batch),
+# the ring byte width `nb`, and a `fused` flag defaulting to the active
+# `set_fused_rounds` state — mirroring how the protocols themselves branch.
+
+
+def _fused_arg(fused) -> bool:
+    return fused_rounds() if fused is None else fused
+
+
+def trunc_cost(n: int, nb: int = 4) -> Cost:
+    """Π_trunc (masked reveal) on n elements: 1 round, 3n."""
+    return Cost(1, 3 * n * nb)
+
+
+def reveal_cost(n: int, nb: int = 4) -> Cost:
+    """Open a shared value to all parties: 1 round, 3n."""
+    return Cost(1, 3 * n * nb)
+
+
+def mul_trunc_cost(n: int, nb: int = 4, fused=None) -> Cost:
+    """Secure product (elementwise / matmul / bmm) + truncation on n output
+    elements.  Fused: one `_open_shift` opening (1r, 6n); unfused: reshare
+    + Π_trunc (2r, 6n).  Same bytes, the fusing saves the round."""
+    return (Cost(1, 6 * n * nb) if _fused_arg(fused)
+            else Cost(2, 6 * n * nb))
+
+
+def relu_cost(n: int, nb: int = 4, fused=None) -> Cost:
+    """Alg 3+5 secure ReLU (same table as the zoo walk's relu entry)."""
+    return (Cost(2, 9 * n * nb, 4, 9 * n * nb) if _fused_arg(fused)
+            else Cost(5, 15 * n * nb, 4, 9 * n * nb))
+
+
+def relu_attention_cost(n: int, nb: int = 4, fused=None) -> Cost:
+    """Customized attention ReLU(s)/L on n score elements: one secure ReLU
+    + a public fixed-point multiply's truncation."""
+    return relu_cost(n, nb, fused) + trunc_cost(n, nb)
+
+
+def exp_cost(n: int, nb: int = 4, fused=None, k: int = 6) -> Cost:
+    """secure_exp: range-reduction truncate + k secure squarings."""
+    c = trunc_cost(n, nb)
+    for _ in range(k):
+        c = c + mul_trunc_cost(n, nb, fused)
+    return c
+
+
+def reciprocal_cost(n: int, nb: int = 4, fused=None,
+                    iters: int = 14) -> Cost:
+    """Newton reciprocal: 2 mul+trunc per iteration."""
+    c = Cost()
+    for _ in range(2 * iters):
+        c = c + mul_trunc_cost(n, nb, fused)
+    return c
+
+
+def rsqrt_cost(n: int, nb: int = 4, fused=None, iters: int = 14) -> Cost:
+    """Newton rsqrt: square + 2 muls per iteration (the ×1/2 rides the
+    final shift, so it is byte-free)."""
+    c = Cost()
+    for _ in range(3 * iters):
+        c = c + mul_trunc_cost(n, nb, fused)
+    return c
+
+
+def rmsnorm_cost(n: int, d: int, nb: int = 4, fused=None) -> Cost:
+    """secure_rmsnorm over (..., d) with n total elements: square, the 1/d
+    averaging truncate on the n/d reduced elements, Newton rsqrt there, and
+    the two output multiplies back at full width."""
+    nr = n // d
+    return (mul_trunc_cost(n, nb, fused) + trunc_cost(nr, nb)
+            + rsqrt_cost(nr, nb, fused)
+            + mul_trunc_cost(n, nb, fused) + mul_trunc_cost(n, nb, fused))
+
+
+def max_lastdim_cost(m: int, last: int, nb: int = 4, fused=None) -> Cost:
+    """Tournament max over the last dim (m = leading numel): one batched
+    gated ReLU per level over m·⌊n/2⌋ elements; odd widths carry the tail."""
+    c = Cost()
+    n = last
+    while n > 1:
+        half = n // 2
+        c = c + relu_cost(m * half, nb, fused)
+        n = half + 1 if n % 2 else half
+    return c
+
+
+def softmax_cost(m: int, last: int, nb: int = 4, fused=None) -> Cost:
+    """secure_softmax over (m, last): max tournament, exp ladder on every
+    element, Newton reciprocal of the m denominators, final product."""
+    return (max_lastdim_cost(m, last, nb, fused)
+            + exp_cost(m * last, nb, fused)
+            + reciprocal_cost(m, nb, fused)
+            + mul_trunc_cost(m * last, nb, fused))
+
+
+def lm_block_cost(q: int, kv: int, d: int, heads: int, d_ff: int,
+                  nb: int = 4, fused=None, customized: bool = True,
+                  static_norm: bool = False) -> Cost:
+    """One secure decoder block: q query rows attending over kv cached
+    positions (q == kv: the full secure_block; q == 1: one decode step
+    against a bucket of length kv).  Masking is public structure — free;
+    ``static_norm`` (the CBNN norm customization) zeroes the RMSNorm terms."""
+    scores = heads * q * kv
+    c = Cost() if static_norm else rmsnorm_cost(q * d, d, nb, fused)
+    for _ in range(3):                              # wq, wk, wv
+        c = c + mul_trunc_cost(q * d, nb, fused)
+    c = c + mul_trunc_cost(scores, nb, fused)       # qk bmm
+    if customized:
+        c = c + relu_attention_cost(scores, nb, fused)
+    else:
+        c = c + softmax_cost(heads * q, kv, nb, fused)
+    c = c + mul_trunc_cost(q * d, nb, fused)        # av bmm
+    c = c + mul_trunc_cost(q * d, nb, fused)        # wo
+    if not static_norm:
+        c = c + rmsnorm_cost(q * d, d, nb, fused)
+    c = c + mul_trunc_cost(q * d_ff, nb, fused)     # up
+    c = c + relu_cost(q * d_ff, nb, fused)
+    c = c + mul_trunc_cost(q * d, nb, fused)        # down
+    return c
+
+
+def lm_step_cost(bucket: int, d: int, heads: int, d_ff: int, n_blocks: int,
+                 vocab: int, nb: int = 4, fused=None,
+                 customized: bool = True, static_norm: bool = False) -> Cost:
+    """One full secure decode step (= comm per generated token): the token
+    embedding gather is local (public index), every block attends over the
+    bucket, then final norm + LM head + the logits opening."""
+    c = Cost()
+    for _ in range(n_blocks):
+        c = c + lm_block_cost(1, bucket, d, heads, d_ff, nb, fused,
+                              customized, static_norm)
+    if not static_norm:
+        c = c + rmsnorm_cost(d, d, nb, fused)
+    c = c + mul_trunc_cost(vocab, nb, fused)        # LM head
+    c = c + reveal_cost(vocab, nb)                  # public logits
+    return c

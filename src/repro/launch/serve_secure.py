@@ -221,6 +221,160 @@ def serve_pool(run, prepare, gen, spec, keys, xs_shares, queries: int,
     return out, online_s, total_s, pool.refills
 
 
+def serve_lm(args, ap):
+    """Secure autoregressive LM serving (DESIGN.md §16): scanned secure
+    prefill of the prompt, then a greedy decode loop whose step program is
+    compiled ONCE per padded bucket length (the cache is bucket-shaped and
+    the position is a traced argument, so every token reuses the program —
+    the trace count is asserted).  Reports tokens/sec and the byte-exact
+    comm-per-token next to the §16 closed-form prediction; ``--quick``
+    additionally pins token parity against the fp32 oracle."""
+    import jax
+    import numpy as np
+    from repro.core import RING32, comm, cost_model
+    from repro.core.secure_transformer import (
+        CompiledDecodeStep, init_kv_cache, make_secure_lm_mesh,
+        plaintext_lm_forward, scan_prefill, secure_decode_step,
+        share_lm_params)
+
+    if args.quick:
+        # CI-smoke preset: 1 block with the static-norm customization, so
+        # the two jits (prefill scan + decode step) compile in ~a minute
+        # each on XLA CPU — compile time scales with protocol-op count and
+        # the Newton-rsqrt ladders dominate it (DESIGN.md §16).  The full
+        # RMSNorm path runs eagerly in tests/test_secure_transformer.py.
+        d, heads, d_ff, blocks, vocab = 16, 2, 32, 1, 16
+        prompt_len, gen = 3, 5
+        buckets = [8]
+        args.static_norm = True
+    else:
+        d, heads, d_ff = args.lm_d, args.lm_heads, args.lm_ffn
+        blocks, vocab = args.lm_blocks, args.lm_vocab
+        prompt_len, gen = args.prompt, args.gen
+        buckets = sorted(int(b) for b in args.buckets.split(","))
+    if d % heads:
+        ap.error(f"--lm-d {d} must divide by --lm-heads {heads}")
+    need = prompt_len + gen
+    fitting = [b for b in buckets if b >= need]
+    if not fitting:
+        ap.error(f"no bucket in {buckets} fits prompt+gen = {need}; "
+                 "grow --buckets or shrink --prompt/--gen")
+    bucket = fitting[0]   # bucket policy: smallest padded length that fits
+    customized = not args.softmax_attention
+    static_norm = args.static_norm
+
+    lm, plain = share_lm_params(jax.random.PRNGKey(args.seed + 1), vocab, d,
+                                heads, d_ff, blocks, RING32)
+    keys = jax.random.split(jax.random.PRNGKey(args.seed + 7), 3)
+    rng = np.random.default_rng(args.seed)
+    prompt = rng.integers(0, vocab, prompt_len).astype(np.int32)
+
+    # per-token comm: the live ledger of ONE decode step, cross-checked
+    # byte-exact against the §16 closed form (same abort contract as the
+    # BNN path — serving never runs on a drifted cost table)
+    led = comm.estimate_cost(
+        lambda c, t, p, k: secure_decode_step(lm, c, t, p, k, customized,
+                                              static_norm),
+        init_kv_cache(blocks, heads, d // heads, bucket, RING32),
+        jnp_scalar(0), jnp_scalar(0), keys)
+    pred = cost_model.lm_step_cost(bucket, d, heads, d_ff, blocks, vocab,
+                                   RING32.nbytes, customized=customized,
+                                   static_norm=static_norm)
+    pred_ok = (pred.rounds, pred.nbytes) == (led.rounds, led.nbytes)
+    print(f"[serve_secure] lm cost model: predicted {pred.rounds} rounds / "
+          f"{pred.nbytes:,} B/token vs measured {led.rounds} / "
+          f"{led.nbytes:,} B -> {'exact' if pred_ok else 'MISMATCH'}")
+    if not pred_ok:
+        raise SystemExit("cost-model prediction diverged from the ledger")
+
+    # one compiled step per padded bucket length
+    slots = 3
+    if args.backend == "mesh":
+        n_dev = len(jax.devices())
+        if n_dev < 3:
+            raise SystemExit(
+                f"mesh backend needs >= 3 devices, have {n_dev} (set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:3]), ("party",))
+        print(f"[serve_secure] mesh axes "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+        mesh_step = make_secure_lm_mesh(lm, mesh, customized, static_norm)
+        steps = {bucket: CompiledDecodeStep(step_fn=mesh_step)}
+        slots = 6   # global pair layout circulates through shard_map
+    else:
+        steps = {bucket: CompiledDecodeStep(lm, customized, static_norm)}
+    step = steps[bucket]
+    prefill = jax.jit(lambda c, t: scan_prefill(step.raw, c, t, keys))
+
+    def one_generation():
+        cache = init_kv_cache(blocks, heads, d // heads, bucket, RING32,
+                              slots=slots)
+        lgs, cache = prefill(cache, prompt)
+        lg = np.asarray(lgs)[-1]
+        toks = []
+        for p in range(prompt_len, prompt_len + gen):
+            nxt = int(np.argmax(lg))   # public greedy selection
+            toks.append(nxt)
+            if p == prompt_len + gen - 1:
+                break
+            lg, cache = step(cache, jnp_scalar(nxt), jnp_scalar(p), keys)
+            lg = np.asarray(lg)
+        return toks
+
+    toks = one_generation()             # compile warm-up
+    t0 = time.time()
+    for _ in range(args.queries):
+        toks = one_generation()
+    dt = time.time() - t0
+    tps = args.queries * gen / dt
+    assert step.traces == 1, (
+        f"decode step retraced {step.traces}x for one bucket length")
+    print(f"[serve_secure] lm backend={args.backend} "
+          f"{'customized' if customized else 'softmax'}"
+          f"{'+static-norm' if static_norm else ''} d={d} heads={heads} "
+          f"blocks={blocks} vocab={vocab} bucket={bucket}: "
+          f"{args.queries}x{gen} tokens in {dt:.2f}s = {tps:.2f} tok/s "
+          f"(1 trace/bucket)")
+    print(f"[serve_secure] per-token comm: {led.nbytes / 1e3:.1f} KB online "
+          f"({led.rounds} rounds) + {led.pre_nbytes / 1e3:.1f} KB offline "
+          f"({led.pre_rounds} rounds); modeled LAN "
+          f"{led.time(comm.LAN) * 1e3:.1f} ms / WAN "
+          f"{led.time(comm.WAN) * 1e3:.0f} ms per token")
+
+    stats = {"model": "lm", "backend": args.backend,
+             "customized": customized, "static_norm": static_norm,
+             "d": d, "heads": heads,
+             "blocks": blocks, "vocab": vocab, "bucket": bucket,
+             "prompt": prompt_len, "gen": gen, "tok_per_s": tps,
+             "comm_kb_per_token": led.nbytes / 1e3, "rounds_per_token":
+             led.rounds, "predicted_rounds": pred.rounds,
+             "traces": step.traces, "tokens": toks}
+
+    if args.quick:
+        # token-identical to the fp32 oracle's greedy rollout
+        otoks, cur = [], list(prompt)
+        for _ in range(gen):
+            olg = plaintext_lm_forward(plain, np.asarray(cur, np.int32),
+                                       heads, customized, bucket,
+                                       static_norm)
+            otoks.append(int(olg[-1].argmax()))
+            cur.append(otoks[-1])
+        if toks != otoks:
+            raise SystemExit(f"secure decode diverged from oracle: "
+                             f"{toks} vs {otoks}")
+        print(f"[serve_secure] quick check OK: {gen} greedy tokens "
+              f"token-identical to the fp32 oracle ({toks})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(stats, f, indent=2)
+        print(f"[serve_secure] wrote {args.json}")
+
+
+def jnp_scalar(v):
+    import jax.numpy as jnp
+    return jnp.asarray(v, jnp.int32)
+
+
 def main():
     # only the CLI mutates the env (importing this module must not); the
     # flag works only before jax initializes
@@ -229,6 +383,9 @@ def main():
             os.environ.get("XLA_FLAGS", "")
             + " --xla_force_host_platform_device_count=8")
     ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=("bnn", "lm"), default="bnn",
+                    help="serve the BNN classifier zoo or the secure "
+                         "autoregressive LM decode loop (DESIGN.md §16)")
     ap.add_argument("--net", default="MnistNet1")
     ap.add_argument("--backend", choices=("local", "mesh"), default="local")
     ap.add_argument("--batch", type=int, default=32)
@@ -269,7 +426,40 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the query generator and sharing keys")
     ap.add_argument("--json", default="", metavar="PATH")
+    lm = ap.add_argument_group("lm serving (--model lm, DESIGN.md §16)")
+    lm.add_argument("--lm-d", type=int, default=32, metavar="D",
+                    help="model width")
+    lm.add_argument("--lm-heads", type=int, default=2)
+    lm.add_argument("--lm-ffn", type=int, default=64)
+    lm.add_argument("--lm-blocks", type=int, default=2)
+    lm.add_argument("--lm-vocab", type=int, default=32)
+    lm.add_argument("--prompt", type=int, default=4, metavar="T",
+                    help="prompt length (synthetic random tokens)")
+    lm.add_argument("--gen", type=int, default=8, metavar="N",
+                    help="tokens to generate greedily")
+    lm.add_argument("--buckets", default="16,32", metavar="L1,L2",
+                    help="padded decode lengths; the smallest bucket >= "
+                         "prompt+gen is compiled (once)")
+    lm.add_argument("--softmax-attention", action="store_true",
+                    help="serve the un-customized comparison mode (full "
+                         "secure softmax) instead of ReLU-attention")
+    lm.add_argument("--static-norm", action="store_true",
+                    help="CBNN norm customization: RMSNorm folded into the "
+                         "adjacent linear at setup — zero online rounds "
+                         "and much faster decode-jit compiles")
+    lm.add_argument("--quick", action="store_true",
+                    help="small static-norm preset + token-parity check "
+                         "against the fp32 oracle (the CI smoke)")
     args = ap.parse_args()
+
+    if args.model == "lm":
+        if args.quick and args.queries == 4:
+            args.queries = 1
+        return serve_lm(args, ap)
+    for flag, dflt in (("quick", False), ("softmax_attention", False),
+                       ("static_norm", False)):
+        if getattr(args, flag) != dflt:
+            ap.error(f"--{flag.replace('_', '-')} requires --model lm")
 
     import jax
     import numpy as np

@@ -188,6 +188,98 @@ def test_kcfg_from_cache_is_bit_identical(tmp_path):
     assert np.array_equal(np.asarray(out_plain), np.asarray(out_tuned))
 
 
+# ---------------------------------------------------------------------------
+# Attention-path closed forms (DESIGN.md §16): the lm_* formulas must track
+# the live CommLedger byte-exactly, like model_cost does for the BNN zoo
+# ---------------------------------------------------------------------------
+
+def _lm_block_ledger(seq, fused, customized):
+    import jax.numpy as jnp  # noqa: F401
+    from repro.core import comm
+    from repro.core.secure_transformer import secure_block, share_block_params
+
+    bp, _ = share_block_params(jax.random.PRNGKey(0), 32, 2, 64)
+    x = share(np.random.default_rng(1).normal(0, 0.5, (seq, 32))
+              .astype(np.float32), jax.random.PRNGKey(2))
+    set_fused_rounds(fused)
+    try:
+        return comm.estimate_cost(
+            lambda s: secure_block(
+                s, bp, Parties.setup(jax.random.PRNGKey(5)),
+                customized=customized), x)
+    finally:
+        set_fused_rounds(True)
+
+
+@pytest.mark.parametrize("customized", [True, False],
+                         ids=["custom", "softmax"])
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "paper"])
+@pytest.mark.parametrize("seq", [8, 16, 32])
+def test_lm_block_cost_byte_exact(seq, fused, customized):
+    """lm_block_cost == live ledger of secure_block, for both attention
+    modes, both round structures, seq ∈ {8, 16, 32}."""
+    led = _lm_block_ledger(seq, fused, customized)
+    pred = cost_model.lm_block_cost(seq, seq, 32, 2, 64, fused=fused,
+                                    customized=customized)
+    assert (pred.rounds, pred.nbytes) == (led.rounds, led.nbytes), \
+        (seq, fused, customized, pred, led.summary())
+
+
+@pytest.mark.parametrize("static_norm", [False, True],
+                         ids=["rmsnorm", "staticnorm"])
+@pytest.mark.parametrize("customized", [True, False],
+                         ids=["custom", "softmax"])
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "paper"])
+def test_lm_step_cost_byte_exact(fused, customized, static_norm):
+    """lm_step_cost == live ledger of one secure_decode_step against a
+    bucket-16 cache (the comm-per-token number serving reports), including
+    the static-norm customization (zero norm rounds)."""
+    import jax.numpy as jnp
+    from repro.core import comm
+    from repro.core.secure_transformer import (init_kv_cache,
+                                               secure_decode_step,
+                                               share_lm_params)
+
+    lm, _ = share_lm_params(jax.random.PRNGKey(0), 32, 32, 2, 64, 2, RING32)
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    set_fused_rounds(fused)
+    try:
+        led = comm.estimate_cost(
+            lambda c, t, p, k: secure_decode_step(lm, c, t, p, k, customized,
+                                                  static_norm),
+            init_kv_cache(2, 2, 16, 16, RING32),
+            jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32), keys)
+    finally:
+        set_fused_rounds(True)
+    pred = cost_model.lm_step_cost(16, 32, 2, 64, 2, 32, fused=fused,
+                                   customized=customized,
+                                   static_norm=static_norm)
+    assert (pred.rounds, pred.nbytes) == (led.rounds, led.nbytes), \
+        (fused, customized, static_norm, pred, led.summary())
+
+
+def test_lm_cost_scaling():
+    """Closed-form scaling laws the serving design rests on: customized
+    decode rounds are bucket-independent (ReLU-attention has no tournament),
+    softmax rounds grow with the bucket, and per-block bytes scale linearly
+    in the score count."""
+    kw = dict(d=32, heads=2, d_ff=64, n_blocks=2, vocab=32)
+    r8 = cost_model.lm_step_cost(8, **kw, customized=True)
+    r32 = cost_model.lm_step_cost(32, **kw, customized=True)
+    assert r8.rounds == r32.rounds
+    assert r32.nbytes > r8.nbytes
+    s8 = cost_model.lm_step_cost(8, **kw, customized=False)
+    s32 = cost_model.lm_step_cost(32, **kw, customized=False)
+    assert s32.rounds > s8.rounds
+    # the custom-vs-softmax gap (the paper's Table-2 claim, LM workload)
+    assert r8.rounds < s8.rounds and r8.nbytes < s8.nbytes
+    # attention bytes are linear in heads at fixed (q, kv)
+    c1 = cost_model.lm_block_cost(1, 16, 32, 1, 64)
+    c2 = cost_model.lm_block_cost(1, 16, 32, 2, 64)
+    c4 = cost_model.lm_block_cost(1, 16, 32, 4, 64)
+    assert c4.nbytes - c2.nbytes == 2 * (c2.nbytes - c1.nbytes)
+
+
 def test_report_properties():
     model = _model("CifarNet2", weights="public")
     rep = cost_model.model_cost(model, (1,) + INPUT_SHAPES["CifarNet2"])

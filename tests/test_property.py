@@ -93,3 +93,97 @@ def test_zero_share_invariant(seed):
     a = parties.zero_shares((7,), RING32)
     assert np.array_equal(np.asarray(a.sum(0)),
                           np.zeros(7, RING32.np_dtype()))
+
+
+# ---------------------------------------------------------------------------
+# Attention-path substrate (DESIGN.md §16): fixed-point error vs plaintext
+# stays bounded across random shapes, scales and ring widths
+# ---------------------------------------------------------------------------
+from contextlib import nullcontext  # noqa: E402
+
+from repro.core import RING64  # noqa: E402
+from repro.core.norm import secure_rmsnorm  # noqa: E402
+from repro.core.softmax import (relu_attention_scores,  # noqa: E402
+                                secure_softmax)
+
+ring_widths = st.sampled_from([RING32, RING64])
+
+
+def _ring_ctx(ring):
+    """RING64 needs 64-bit lanes; scope x64 so the suite stays 32-bit."""
+    return jax.experimental.enable_x64() if ring.bits == 64 else nullcontext()
+
+
+def _bound_bits(ring):
+    """MSB envelope |x_enc| < 2^bound_bits: the default 18 covers RING32's
+    f=12 activations; RING64 at f=20 needs frac+6 for the same magnitude."""
+    return 18 if ring.bits == 32 else ring.frac + 6
+
+
+@given(st.integers(1, 3), st.integers(2, 8), st.floats(0.25, 4),
+       st.integers(0, 10**6), ring_widths)
+@SET
+def test_secure_softmax_bounded(rows, last, scale, seed, ring):
+    with _ring_ctx(ring):
+        rng = np.random.default_rng(seed)
+        x = (rng.uniform(-1, 1, (rows, last)) * scale).astype(np.float32)
+        parties = Parties.setup(jax.random.PRNGKey(seed + 1))
+        xs = share(jnp.asarray(x), jax.random.PRNGKey(seed), ring)
+        got = np.asarray(reconstruct(
+            secure_softmax(xs, parties, bound_bits=_bound_bits(ring))))
+    e = np.exp(x - x.max(-1, keepdims=True))
+    want = e / e.sum(-1, keepdims=True)
+    assert np.abs(got - want).max() < 0.02, (x.shape, scale)
+    assert np.abs(got.sum(-1) - 1).max() < 0.02  # rows stay normalised
+
+
+@given(st.integers(1, 2), st.integers(1, 4), st.integers(2, 8),
+       st.floats(0.25, 4), st.integers(0, 10**6), ring_widths)
+@SET
+def test_relu_attention_bounded(h, q, s, scale, seed, ring):
+    with _ring_ctx(ring):
+        rng = np.random.default_rng(seed)
+        x = (rng.uniform(-1, 1, (h, q, s)) * scale).astype(np.float32)
+        parties = Parties.setup(jax.random.PRNGKey(seed + 1))
+        xs = share(jnp.asarray(x), jax.random.PRNGKey(seed), ring)
+        got = np.asarray(reconstruct(relu_attention_scores(
+            xs, s, parties, bound_bits=_bound_bits(ring))))
+    want = np.maximum(x, 0) / s
+    assert np.abs(got - want).max() < 8 * 2.0 ** -ring.frac, (x.shape, s)
+
+
+@given(st.integers(1, 3), st.sampled_from([8, 16, 32]),
+       st.floats(0.3, 2.0), st.integers(0, 10**6), ring_widths)
+@SET
+def test_secure_rmsnorm_bounded(n, d, scale, seed, ring):
+    from hypothesis import assume
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, scale, (n, d)).astype(np.float32)
+    ms = (x * x).mean(-1)
+    # the Newton-rsqrt envelope RMSNorm operands land in by construction
+    assume(0.05 < ms.min() and ms.max() < 8)
+    g = rng.uniform(0.5, 1.5, (d,)).astype(np.float32)
+    with _ring_ctx(ring):
+        parties = Parties.setup(jax.random.PRNGKey(seed + 1))
+        xs = share(jnp.asarray(x), jax.random.PRNGKey(seed), ring)
+        gs = share(jnp.asarray(g), jax.random.PRNGKey(seed + 2), ring)
+        got = np.asarray(reconstruct(secure_rmsnorm(xs, gs, parties)))
+    want = x / np.sqrt(ms[:, None] + 1e-5) * g
+    assert np.abs(got - want).max() < 0.02, (n, d, scale)
+
+
+@given(st.lists(st.integers(-16, 16), min_size=1, max_size=24),
+       st.integers(0, 10**6), ring_widths)
+@SET
+def test_msb_sign_at_truncation_boundary(ks, seed, ring):
+    """Sign/MSB extraction is EXACT even a few ulp from zero — the regime
+    truncation noise would flip a naive comparison."""
+    with _ring_ctx(ring):
+        x = jnp.asarray(np.asarray(ks, np.float64) * 2.0 ** -ring.frac,
+                        jnp.float32)
+        parties = Parties.setup(jax.random.PRNGKey(seed + 1))
+        bits = np.asarray(reconstruct_bits(
+            msb_extract(share(x, jax.random.PRNGKey(seed), ring), parties)))
+        enc = np.asarray(ring.encode(x))
+    want = (enc >> (ring.bits - 1)).astype(bits.dtype)
+    assert np.array_equal(bits, want), (ks, bits, want)
