@@ -67,10 +67,24 @@ def main() -> None:
             print(f"{name},ERROR,{traceback.format_exc(limit=1)!r}",
                   file=sys.stderr)
     if args.json:
+        # read-modify-write: a partial --only run updates its own rows and
+        # keeps rows other suites wrote to the same file earlier
+        rows: dict[str, float] = {}
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    prev = json.load(f)
+                if isinstance(prev, dict):
+                    rows.update(prev)
+            except (OSError, ValueError):
+                print(f"warning: could not merge into unreadable "
+                      f"{args.json}; rewriting", file=sys.stderr)
+        rows.update(collected)
         with open(args.json, "w") as f:
-            json.dump(collected, f, indent=2, sort_keys=True)
+            json.dump(rows, f, indent=2, sort_keys=True)
             f.write("\n")
-        print(f"wrote {len(collected)} rows to {args.json}", file=sys.stderr)
+        print(f"wrote {len(collected)} rows to {args.json} "
+              f"({len(rows)} total)", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -65,6 +65,10 @@ ONLINE_CELLS = [("MnistNet1", 8, ("local", "mesh")),
 # verified-inference cells (DESIGN.md §14): off vs opens vs full on the
 # local backend; CI pins opens within ~10% of off and bit-identity
 VERIFY_CELLS = [("MnistNet3", 4)]
+# observability cells (DESIGN.md §17): telemetry disabled vs full tracing
+# on the same cell as the secure.<net>.local.b<batch> baseline; CI pins
+# off within 5% of that untouched baseline and on within 15% of off
+OBS_CELLS = [("MnistNet3", 4)]
 # cost-model-compiled cells (DESIGN.md §15): fixed-default kernel configs
 # vs the autotuned compile (deployment descriptor + persisted kernel cache)
 COMPILED_CELLS = [("MnistNet1", 8)]
@@ -246,6 +250,67 @@ def _verify_rows(net: str, batch: int):
     return rows
 
 
+def _obs_rows(net: str, batch: int):
+    """Telemetry overhead (DESIGN.md §17) on the SAME serving cell as the
+    ``secure.<net>.local.b<batch>`` baseline row: ``off`` exercises the
+    disabled-mode cost contract (every runtime hook is a module-level
+    ``is None`` check), ``on`` runs full tracing + metrics — per-query
+    spans, a latency histogram, and the comm-correlated trace export.
+    Outputs are asserted bit-identical in both states, and the emitted
+    trace must be Chrome-trace-schema valid."""
+    import numpy as np
+    import jax
+    from repro.core import RING32, share, telemetry
+    from repro.core.randomness import Parties
+    from repro.launch.serve_secure import make_runner
+    from repro.nn.bnn import INPUT_SHAPES
+
+    shape = INPUT_SHAPES[net]
+    model = _compile(net, "binary")
+    run, _ = make_runner(model, "local", batch)
+    rng = np.random.default_rng(0)
+    x = (rng.integers(0, 2, (batch,) + shape).astype(np.float32) - 0.5)
+    xs = share(x, jax.random.PRNGKey(3), RING32)
+    keys = Parties.setup(jax.random.PRNGKey(7)).keys
+
+    base = np.asarray(run(keys, xs.shares))   # compile + warm
+
+    def best_of(fn):
+        best = float("inf")
+        for _ in range(QUERIES):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    us_off = best_of(lambda: run(keys, xs.shares))
+    out_off = np.asarray(run(keys, xs.shares))
+
+    tracer, reg = telemetry.Tracer(), telemetry.MetricsRegistry()
+    with telemetry.tracing(tracer), telemetry.collecting(reg):
+        with telemetry.span("jit_warmup", cat="compile"):
+            out_on = np.asarray(run(keys, xs.shares))
+
+        def one():
+            with telemetry.span("query", cat="online", lane="parties"):
+                tq = time.perf_counter()
+                out = run(keys, xs.shares)
+                jax.block_until_ready(out)
+                telemetry.observe("query_latency_seconds",
+                                  time.perf_counter() - tq)
+            return out
+
+        us_on = best_of(one)
+    telemetry.validate_chrome_trace(tracer.chrome_trace())
+    assert np.array_equal(base, out_off) and np.array_equal(base, out_on), \
+        "telemetry must never change model outputs"
+    return [(f"secure.obs.{net}.local.b{batch}.off", us_off,
+             "telemetry disabled (module-level None checks only)"),
+            (f"secure.obs.{net}.local.b{batch}.on", us_on,
+             f"full tracing+metrics ({len(tracer.spans)} spans); "
+             f"{us_on / us_off:.2f}x vs off")]
+
+
 def _compiled_rows(net: str, batch: int):
     """Cost-model-driven compile (DESIGN.md §15) vs the fixed defaults on
     the SAME kernel-path serving cell: ``tuned`` compiles with a deployment
@@ -350,6 +415,8 @@ def secure_e2e():
                                  [b for b in wanted if b in backends]))
     for net, batch in VERIFY_CELLS:
         rows.extend(_verify_rows(net, batch))
+    for net, batch in OBS_CELLS:
+        rows.extend(_obs_rows(net, batch))
     for net, batch in COMPILED_CELLS:
         rows.extend(_compiled_rows(net, batch))
     for net in COMM_NETS:

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Diff freshly-measured BENCH_*.json files against the committed copies.
+
+    python scripts/bench_diff.py [--ref HEAD] [--pinned benchmarks/pinned_rows.json] \
+        BENCH_secure_e2e.json [BENCH_kernels.json ...]
+
+For every row present in both the fresh file and ``git show <ref>:<file>``
+a readable per-row report is printed (old, new, ratio).  The exit status
+is non-zero only when a **pinned** row regresses beyond the pinned
+threshold: absolute timings are meaningless across machines (CI runners,
+laptops, the farm), so the pin list holds deterministic rows —
+communication byte counts derived from the cost model/ledger — where a
+ratio drift is a real protocol regression, not scheduler noise.
+Timing-only rows are reported for the trajectory but never gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def committed_rows(ref: str, path: str) -> dict | None:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:{path}"],
+            capture_output=True, text=True, check=True).stdout
+    except subprocess.CalledProcessError:
+        return None   # file is new at this ref
+    try:
+        rows = json.loads(blob)
+    except ValueError:
+        return None
+    return rows if isinstance(rows, dict) else None
+
+
+def diff_file(path: str, ref: str, pinned: dict) -> list[str]:
+    """Return failure strings for pinned rows of ``path`` beyond threshold."""
+    with open(path) as f:
+        fresh = json.load(f)
+    old = committed_rows(ref, path)
+    if old is None:
+        print(f"{path}: no committed copy at {ref}; skipping diff")
+        return []
+    threshold = float(pinned.get("threshold", 1.20))
+    pins = set(pinned.get("rows", []))
+    failures: list[str] = []
+    width = max((len(k) for k in fresh), default=4)
+    print(f"\n{path} (vs {ref}, pinned gate {threshold:.2f}x):")
+    print(f"  {'row':<{width}}  {'old':>12}  {'new':>12}  ratio")
+    for name in sorted(fresh):
+        if name not in old:
+            print(f"  {name:<{width}}  {'--':>12}  {fresh[name]:>12.1f}  (new)")
+            continue
+        was, now = float(old[name]), float(fresh[name])
+        ratio = now / was if was else float("inf")
+        mark = ""
+        if name in pins:
+            mark = "  [pinned]"
+            if ratio > threshold:
+                mark = f"  [pinned: FAIL >{threshold:.2f}x]"
+                failures.append(
+                    f"{path}:{name} regressed {ratio:.2f}x "
+                    f"({was:.1f} -> {now:.1f})")
+        elif ratio > threshold:
+            mark = "  (slower; not pinned, not gating)"
+        print(f"  {name:<{width}}  {was:>12.1f}  {now:>12.1f}  "
+              f"{ratio:5.2f}x{mark}")
+    gone = sorted(set(old) - set(fresh))
+    for name in gone:
+        tag = "  [pinned: FAIL missing]" if name in pins else ""
+        print(f"  {name:<{width}}  {old[name]:>12.1f}  {'--':>12}  (gone){tag}")
+        if name in pins:
+            failures.append(f"{path}:{name} pinned row disappeared")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", help="fresh BENCH_*.json paths")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the committed baselines")
+    ap.add_argument("--pinned", default="benchmarks/pinned_rows.json",
+                    help="JSON {threshold, rows: [...]} of gating rows")
+    args = ap.parse_args()
+    with open(args.pinned) as f:
+        pinned = json.load(f)
+    failures: list[str] = []
+    for path in args.files:
+        failures += diff_file(path, args.ref, pinned)
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print("\nbench regression gate: OK (no pinned row beyond threshold)")
+
+
+if __name__ == "__main__":
+    main()

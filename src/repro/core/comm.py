@@ -21,6 +21,7 @@ import jax
 __all__ = [
     "NetworkModel", "LAN", "WAN", "CommLedger", "track", "record",
     "estimate_cost", "round_barrier", "add_listener", "remove_listener",
+    "listening",
 ]
 
 
@@ -74,11 +75,22 @@ class CommLedger:
         return self.nbytes / 1e6
 
     def summary(self) -> str:
+        """Per-tag breakdown, hottest online tags first: sorted by bytes
+        descending with a percent-of-online-total column (offline
+        ``pre:`` tags follow, sorted the same way against the offline
+        total)."""
         lines = [f"total  rounds={self.rounds:4d}  bytes={self.nbytes:,} "
                  f"({self.megabytes:.4f} MB)  [pre: r={self.pre_rounds} "
                  f"b={self.pre_nbytes:,}]"]
-        for tag, (r, b) in sorted(self.by_tag.items()):
-            lines.append(f"  {tag:28s} rounds={r:4d}  bytes={b:,}")
+        online = [(t, rb) for t, rb in self.by_tag.items()
+                  if not t.startswith("pre:")]
+        offline = [(t, rb) for t, rb in self.by_tag.items()
+                   if t.startswith("pre:")]
+        for group, total in ((online, self.nbytes), (offline, self.pre_nbytes)):
+            for tag, (r, b) in sorted(group, key=lambda kv: (-kv[1][1], kv[0])):
+                pct = 100.0 * b / total if total else 0.0
+                lines.append(f"  {tag:28s} rounds={r:4d}  bytes={b:,}"
+                             f"  ({pct:5.1f}%)")
         return "\n".join(lines)
 
 
@@ -98,6 +110,17 @@ def add_listener(fn: Callable) -> None:
 
 def remove_listener(fn: Callable) -> None:
     _LISTENERS.remove(fn)
+
+
+@contextlib.contextmanager
+def listening(fn: Callable):
+    """Register ``fn`` as a :func:`record` listener for the enclosed
+    block, guaranteeing removal on exit (even if the block raises)."""
+    add_listener(fn)
+    try:
+        yield fn
+    finally:
+        remove_listener(fn)
 
 
 @contextlib.contextmanager
@@ -124,12 +147,24 @@ def track():
 
 def record(tag: str, rounds: int, nbytes: int, preprocess: bool = False):
     """Called by protocols at trace time. Ledger add is a no-op when no
-    tracker is active; listeners always fire."""
+    tracker is active; listeners always fire.
+
+    A raising listener cannot corrupt the accounting: every listener
+    still runs and the ledger add still happens, after which the first
+    listener exception propagates (the verifier relies on its own
+    raises surfacing; the ledger must stay byte-exact regardless)."""
     preprocess = preprocess or _PREPROCESS_DEPTH > 0
-    for fn in _LISTENERS:
-        fn(tag, rounds, nbytes, preprocess)
+    err = None
+    for fn in list(_LISTENERS):
+        try:
+            fn(tag, rounds, nbytes, preprocess)
+        except BaseException as e:  # noqa: BLE001 — deferred, re-raised below
+            if err is None:
+                err = e
     if _STACK:  # top-only: round_barrier propagates to its parent on exit
         _STACK[-1].add(tag, rounds, nbytes, preprocess=preprocess)
+    if err is not None:
+        raise err
 
 
 @contextlib.contextmanager

@@ -199,6 +199,16 @@ class Verifier:
         ``report`` (host-side; syncs the digest vectors only)."""
         if self.mode == "off":
             return
+        from . import telemetry
+        with telemetry.span("verify.check", cat="verify", mode=self.mode,
+                            ops=len(self.meta)):
+            try:
+                self._check(report)
+            except IntegrityError as e:
+                telemetry.inc("integrity_aborts_total", op=e.op or "?")
+                raise
+
+    def _check(self, report: dict):
         import numpy as np
         rep = {k: np.asarray(v).reshape(PARTIES, -1)
                if np.asarray(v).size else np.zeros((PARTIES, 0), np.uint32)

@@ -48,7 +48,7 @@ import warnings
 import jax
 import jax.numpy as jnp
 
-from . import comm, transport
+from . import comm, telemetry, transport
 from .integrity import (MaterialDesyncError, PoolExhaustedError,
                         verify_tape_slice)
 from .randomness import Parties
@@ -525,13 +525,17 @@ class TapePool:
     def _prefetch(self):
         if not self._want_more():
             return
-        keys = tape_session_keys(
-            jax.random.fold_in(self.master_key, self.generated), self.depth)
-        self._bufs.append([MaterialTape(self.gen(keys), self.spec,
-                                        self.depth), 0])
+        with telemetry.span(f"tape_refill[{self.generated}]", cat="offline",
+                            depth=self.depth):
+            keys = tape_session_keys(
+                jax.random.fold_in(self.master_key, self.generated),
+                self.depth)
+            self._bufs.append([MaterialTape(self.gen(keys), self.spec,
+                                            self.depth), 0])
         self.generated += 1
         if self.generated > 1:
             self.refills += 1
+            telemetry.inc("pool_refills_total")
 
     @property
     def supply(self) -> int:
@@ -560,6 +564,7 @@ class TapePool:
                 "tape pool underrun: online phase blocked on a "
                 "synchronous refill (offline plant is falling behind)",
                 RuntimeWarning, stacklevel=2)
+            telemetry.inc("pool_backpressure_total")
             self._prefetch()
         if self.demand is not None and not self._warned_dry \
                 and self.demand - self.taken > self.supply \
@@ -573,6 +578,8 @@ class TapePool:
         tape, slot = self._bufs[0]
         self._bufs[0][1] += 1
         self.taken += 1
+        if telemetry.enabled():
+            telemetry.gauge("pool_supply", self.supply)
         sl = tape.query_slice(slot)
         if self.verify:
             verify_tape_slice(self.spec, sl)

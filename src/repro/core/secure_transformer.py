@@ -486,8 +486,9 @@ class CompiledDecodeStep:
 
     def __init__(self, lm: SecureLMParams | None = None,
                  customized: bool = True, static_norm: bool = False,
-                 tag: str = "lm", step_fn=None):
+                 tag: str = "lm", step_fn=None, bucket=None):
         self.traces = 0
+        self.bucket = bucket   # padded bucket length (telemetry label)
         if step_fn is None:
             def step_fn(cache, tok, pos, keys):
                 return secure_decode_step(lm, cache, tok, pos, keys,
@@ -503,7 +504,19 @@ class CompiledDecodeStep:
         self._jit = jax.jit(counted)
 
     def __call__(self, cache, tok, pos, keys):
-        return self._jit(cache, tok, pos, keys)
+        from . import telemetry
+        if not telemetry.enabled():   # disabled mode: no clock, no span
+            return self._jit(cache, tok, pos, keys)
+        # the traces counter distinguishes the compile call from steady-
+        # state decode, so compile cost lands in its own span category
+        before = self.traces
+        b = self.bucket if self.bucket is not None else "?"
+        with telemetry.span(f"decode_step[b{b}]", cat="online",
+                            lane="parties") as s:
+            out = self._jit(cache, tok, pos, keys)
+        if self.traces > before and s is not None:
+            s.name, s.cat = f"decode_compile[b{b}]", "compile"
+        return out
 
 
 def make_secure_lm_mesh(lm: SecureLMParams, mesh, customized: bool = True,

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from . import integrity
+from . import telemetry
 
 try:
     from jax import shard_map as shard_map_compat
@@ -125,6 +126,7 @@ class LocalTransport:
     def complete(self, parts):
         """Additive parts -> RSS stack.  The reshare data movement: P_i
         sends z_i to P_{i-1}.  The stacked sim already holds every slot."""
+        telemetry.movement("complete", self.name)
         v = integrity.active()
         if v is not None:
             own = [integrity.fold_digest(parts[i]) for i in range(PARTIES)]
@@ -135,6 +137,7 @@ class LocalTransport:
 
     def send(self, x, frm: int, to: int):
         """Point-to-point message; globally visible in simulation."""
+        telemetry.movement("send", self.name)
         v = integrity.active()
         if v is not None:
             row = jnp.stack([integrity.fold_digest(x)] * PARTIES)
@@ -149,6 +152,7 @@ class LocalTransport:
     # -- openings --------------------------------------------------------
     def open_parts(self, parts):
         """All parties learn sum of additive parts (each P_i broadcasts)."""
+        telemetry.movement("open_parts", self.name)
         o = parts[0] + parts[1] + parts[2]
         v = integrity.active()
         if v is not None:
@@ -158,6 +162,7 @@ class LocalTransport:
     def open_rss(self, stack):
         """Reveal a shared value: P_i sends x_i to P_{i-1} (each party is
         missing exactly one share thanks to the pair invariant)."""
+        telemetry.movement("open_rss", self.name)
         o = stack[0] + stack[1] + stack[2]
         v = integrity.active()
         if v is not None:
@@ -253,6 +258,7 @@ class MeshTransport:
 
     # -- movement --------------------------------------------------------
     def complete(self, parts):
+        telemetry.movement("complete", self.name)
         recv = self._recv_from_next(parts)
         v = integrity.active()
         if v is not None:
@@ -261,6 +267,7 @@ class MeshTransport:
         return jnp.concatenate([parts, recv], axis=0)
 
     def send(self, x, frm: int, to: int):
+        telemetry.movement("send", self.name)
         r = jax.lax.ppermute(x, self.axis, [(frm, to)])
         v = integrity.active()
         if v is not None:
@@ -273,6 +280,7 @@ class MeshTransport:
 
     # -- openings --------------------------------------------------------
     def open_parts(self, parts):
+        telemetry.movement("open_parts", self.name)
         g = jax.lax.all_gather(parts[0], self.axis, axis=0)
         o = g[0] + g[1] + g[2]
         v = integrity.active()
@@ -283,6 +291,7 @@ class MeshTransport:
     def open_rss(self, stack):
         # P_i holds (x_i, x_{i+1}); the missing x_{i+2} is the neighbour's
         # second component — one ppermute, exactly the ledger's 3 messages.
+        telemetry.movement("open_rss", self.name)
         third = self._recv_from_next(stack[1])
         o = stack[0] + stack[1] + third
         v = integrity.active()

@@ -198,6 +198,7 @@ def serve_pool(run, prepare, gen, spec, keys, xs_shares, queries: int,
     :class:`~repro.core.integrity.PoolExhaustedError` instead of silent
     material reuse.  Returns (outputs, online_s, total_s, refills)."""
     import jax
+    from repro.core import telemetry
     from repro.core.preprocessing import TapePool
 
     if queries < 1:
@@ -205,23 +206,35 @@ def serve_pool(run, prepare, gen, spec, keys, xs_shares, queries: int,
     # +1: the compile warm-up consumes one slice before the timed loop
     pool = TapePool(gen, spec, depth, master_key, demand=queries + 1,
                     verify=verify == "full")
-    jax.block_until_ready(run(keys, prepare(xs_shares, pool.take())))
+    with telemetry.span("jit_warmup", cat="compile"):
+        jax.block_until_ready(run(keys, prepare(xs_shares, pool.take())))
 
     out = None
     online_s = 0.0
     t0 = time.perf_counter()
-    for _ in range(queries):
+    for qi in range(queries):
         prepared = prepare(xs_shares, pool.take())
         jax.block_until_ready(prepared)   # staging done before the clock
         t1 = time.perf_counter()
-        out = run(keys, prepared)
-        jax.block_until_ready(out)
-        online_s += time.perf_counter() - t1
+        with telemetry.span(f"query[{qi}]", cat="online", lane="parties"):
+            out = run(keys, prepared)
+            jax.block_until_ready(out)
+        dq = time.perf_counter() - t1
+        online_s += dq
+        telemetry.observe("query_latency_seconds", dq)
     total_s = time.perf_counter() - t0
     return out, online_s, total_s, pool.refills
 
 
 def serve_lm(args, ap):
+    """Telemetry-wrapped entry for :func:`_serve_lm` (--model lm)."""
+    from repro.core import telemetry
+    tracer, reg = make_obs(args, parties=3 if args.backend == "mesh" else 0)
+    with telemetry.tracing(tracer), telemetry.collecting(reg):
+        return _serve_lm(args, ap, tracer, reg)
+
+
+def _serve_lm(args, ap, tracer=None, reg=None):
     """Secure autoregressive LM serving (DESIGN.md §16): scanned secure
     prefill of the prompt, then a greedy decode loop whose step program is
     compiled ONCE per padded bucket length (the cache is bucket-shaped and
@@ -231,7 +244,7 @@ def serve_lm(args, ap):
     additionally pins token parity against the fp32 oracle."""
     import jax
     import numpy as np
-    from repro.core import RING32, comm, cost_model
+    from repro.core import RING32, comm, cost_model, telemetry
     from repro.core.secure_transformer import (
         CompiledDecodeStep, init_kv_cache, make_secure_lm_mesh,
         plaintext_lm_forward, scan_prefill, secure_decode_step,
@@ -272,11 +285,12 @@ def serve_lm(args, ap):
     # per-token comm: the live ledger of ONE decode step, cross-checked
     # byte-exact against the §16 closed form (same abort contract as the
     # BNN path — serving never runs on a drifted cost table)
-    led = comm.estimate_cost(
-        lambda c, t, p, k: secure_decode_step(lm, c, t, p, k, customized,
-                                              static_norm),
-        init_kv_cache(blocks, heads, d // heads, bucket, RING32),
-        jnp_scalar(0), jnp_scalar(0), keys)
+    with telemetry.span("ledger_estimate", cat="setup", bucket=bucket):
+        led = comm.estimate_cost(
+            lambda c, t, p, k: secure_decode_step(lm, c, t, p, k, customized,
+                                                  static_norm),
+            init_kv_cache(blocks, heads, d // heads, bucket, RING32),
+            jnp_scalar(0), jnp_scalar(0), keys)
     pred = cost_model.lm_step_cost(bucket, d, heads, d_ff, blocks, vocab,
                                    RING32.nbytes, customized=customized,
                                    static_norm=static_norm)
@@ -299,29 +313,37 @@ def serve_lm(args, ap):
         print(f"[serve_secure] mesh axes "
               f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
         mesh_step = make_secure_lm_mesh(lm, mesh, customized, static_norm)
-        steps = {bucket: CompiledDecodeStep(step_fn=mesh_step)}
+        steps = {bucket: CompiledDecodeStep(step_fn=mesh_step,
+                                            bucket=bucket)}
         slots = 6   # global pair layout circulates through shard_map
     else:
-        steps = {bucket: CompiledDecodeStep(lm, customized, static_norm)}
+        steps = {bucket: CompiledDecodeStep(lm, customized, static_norm,
+                                            bucket=bucket)}
     step = steps[bucket]
     prefill = jax.jit(lambda c, t: scan_prefill(step.raw, c, t, keys))
 
     def one_generation():
         cache = init_kv_cache(blocks, heads, d // heads, bucket, RING32,
                               slots=slots)
-        lgs, cache = prefill(cache, prompt)
-        lg = np.asarray(lgs)[-1]
+        with telemetry.span(f"prefill[{prompt_len}]", cat="online",
+                            lane="parties"):
+            lgs, cache = prefill(cache, prompt)
+            lg = np.asarray(lgs)[-1]
         toks = []
         for p in range(prompt_len, prompt_len + gen):
             nxt = int(np.argmax(lg))   # public greedy selection
             toks.append(nxt)
             if p == prompt_len + gen - 1:
                 break
+            tq = time.perf_counter()
             lg, cache = step(cache, jnp_scalar(nxt), jnp_scalar(p), keys)
             lg = np.asarray(lg)
+            telemetry.observe("token_latency_seconds",
+                              time.perf_counter() - tq, bucket=str(bucket))
         return toks
 
-    toks = one_generation()             # compile warm-up
+    with telemetry.span("jit_warmup", cat="compile", bucket=bucket):
+        toks = one_generation()         # compile warm-up
     t0 = time.time()
     for _ in range(args.queries):
         toks = one_generation()
@@ -350,6 +372,9 @@ def serve_lm(args, ap):
              led.rounds, "predicted_rounds": pred.rounds,
              "traces": step.traces, "tokens": toks}
 
+    emit_obs(args, tracer, reg, led, online_s=dt,
+             queries=args.queries * gen, unit="token")
+
     if args.quick:
         # token-identical to the fp32 oracle's greedy rollout
         otoks, cur = [], list(prompt)
@@ -373,6 +398,54 @@ def serve_lm(args, ap):
 def jnp_scalar(v):
     import jax.numpy as jnp
     return jnp.asarray(v, jnp.int32)
+
+
+def make_obs(args, parties: int = 0):
+    """``--trace``/``--metrics-*`` -> (Tracer | None, Registry | None).
+
+    ``parties`` > 0 (the mesh backend) fans ``lane="parties"`` spans out
+    into one trace lane per party (DESIGN.md §17)."""
+    from repro.core import telemetry
+    if not (args.trace or args.metrics_json or args.metrics_prom):
+        return None, None
+    return telemetry.Tracer(parties=parties), telemetry.MetricsRegistry()
+
+
+def emit_obs(args, tracer, reg, led, predicted=None, model=None,
+             online_s=None, queries=1, unit="query"):
+    """Write the ``--trace``/``--metrics-*`` artifacts and print the
+    predicted-vs-measured attribution table (DESIGN.md §17).  Measured
+    rounds/bytes per row come straight from the live ledger and sum to
+    its totals exactly; measured wall time (``online_s`` over
+    ``queries`` units) is split by predicted time share."""
+    from repro.core import telemetry
+    if tracer is None and reg is None:
+        return None
+    if reg is not None:
+        reg.record_ledger(led, model, queries=queries)
+    per_q = online_s / queries if online_s and queries else None
+    rep = telemetry.attribution(predicted, led, online_s=per_q,
+                                deployment=args.deployment)
+    print(f"[serve_secure] attribution per {unit} "
+          f"(deployment={rep.deployment}, "
+          f"{'prediction exact' if rep.exact else 'prediction DIVERGED'}):")
+    print(rep.render())
+    if tracer is not None:
+        print("[serve_secure] phases: "
+              + "  ".join(f"{k}={v * 1e3:.1f}ms" for k, v in
+                          sorted(tracer.phase_seconds().items())))
+        if args.trace:
+            tracer.write(args.trace)
+            print(f"[serve_secure] wrote trace {args.trace} "
+                  f"({len(tracer.spans)} spans; open in Perfetto or "
+                  "chrome://tracing)")
+    if args.metrics_json:
+        reg.write_json(args.metrics_json)
+        print(f"[serve_secure] wrote metrics {args.metrics_json}")
+    if args.metrics_prom:
+        reg.write_prom(args.metrics_prom)
+        print(f"[serve_secure] wrote metrics {args.metrics_prom}")
+    return rep
 
 
 def main():
@@ -426,6 +499,19 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the query generator and sharing keys")
     ap.add_argument("--json", default="", metavar="PATH")
+    obs = ap.add_argument_group("observability (DESIGN.md §17)")
+    obs.add_argument("--trace", default="", metavar="PATH",
+                     help="write a Chrome trace-event JSON of the run "
+                          "(compile / offline / online / verify spans with "
+                          "per-op comm annotations; open in Perfetto or "
+                          "chrome://tracing)")
+    obs.add_argument("--metrics-json", default="", metavar="PATH",
+                     help="write the metrics registry (comm counters, "
+                          "latency histograms with p50/p95/p99, pool "
+                          "gauges) as JSON")
+    obs.add_argument("--metrics-prom", default="", metavar="PATH",
+                     help="write the same metrics in Prometheus text "
+                          "exposition format")
     lm = ap.add_argument_group("lm serving (--model lm, DESIGN.md §16)")
     lm.add_argument("--lm-d", type=int, default=32, metavar="D",
                     help="model width")
@@ -460,10 +546,23 @@ def main():
                        ("static_norm", False)):
         if getattr(args, flag) != dflt:
             ap.error(f"--{flag.replace('_', '-')} requires --model lm")
+    return serve_bnn(args, ap)
 
+
+def serve_bnn(args, ap):
+    """Telemetry-wrapped entry for :func:`_serve_bnn` (--model bnn)."""
+    from repro.core import telemetry
+    tracer, reg = make_obs(args, parties=3 if args.backend == "mesh" else 0)
+    with telemetry.tracing(tracer), telemetry.collecting(reg):
+        return _serve_bnn(args, ap, tracer, reg)
+
+
+def _serve_bnn(args, ap, tracer=None, reg=None):
+    """Batched secure-BNN classifier serving: the pre-PR-10 main() body
+    plus observability spans (DESIGN.md §17)."""
     import jax
     import numpy as np
-    from repro.core import RING32, comm, cost_model, share
+    from repro.core import RING32, comm, cost_model, share, telemetry
     from repro.core.integrity import IntegrityError, verify_model_ingest
     from repro.core.randomness import Parties
     from repro.core.secure_model import secure_infer_cost
@@ -497,8 +596,10 @@ def main():
     if args.deployment is not None:
         deployment = cost_model.resolve_deployment(
             args.deployment).with_batch(args.batch)
-    model = build(args.net, not args.no_kernel, args.weights,
-                  args.binary_linear, deployment=deployment)
+    with telemetry.span("compile_secure", cat="compile", net=args.net,
+                        batch=args.batch):
+        model = build(args.net, not args.no_kernel, args.weights,
+                      args.binary_linear, deployment=deployment)
     if deployment is not None:
         rep = model.predicted
         print(f"[serve_secure] path solver ({deployment.name}): "
@@ -513,7 +614,10 @@ def main():
         print("[serve_secure] model ingest verified "
               f"({len(model.ops)} layers)")
 
-    led = secure_infer_cost(model, (args.batch,) + shape)
+    # the abstract trace fires every comm.record: under --trace this span
+    # carries the whole per-query op stream as instant events
+    with telemetry.span("ledger_estimate", cat="setup", net=args.net):
+        led = secure_infer_cost(model, (args.batch,) + shape)
     # symbolic model vs live ledger: byte-exact by construction (§15) —
     # a mismatch means the cost table drifted from the protocol stack
     pred = cost_model.model_cost(model, (args.batch,) + shape)
@@ -568,17 +672,28 @@ def main():
                           "img_per_s_online": qps_on * args.batch,
                           "query_per_s": qps_total,
                           "img_per_s": qps_total * args.batch})
+            measured_online = online_s
         else:
             run, mesh = make_runner(model, args.backend, args.batch,
                                     verify=args.verify)
             if mesh is not None:
                 print(f"[serve_secure] mesh axes "
                       f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
-            out = np.asarray(run(parties.keys, xs.shares))  # compile + warm
+            with telemetry.span("jit_warmup", cat="compile"):
+                out = np.asarray(run(parties.keys, xs.shares))
             assert out.shape[0] == args.batch
             t0 = time.time()
             for q in range(args.queries):
-                out = run(parties.keys, xs.shares)
+                if telemetry.enabled():
+                    with telemetry.span(f"query[{q}]", cat="online",
+                                        lane="parties"):
+                        tq = time.perf_counter()
+                        out = run(parties.keys, xs.shares)
+                        jax.block_until_ready(out)
+                        telemetry.observe("query_latency_seconds",
+                                          time.perf_counter() - tq)
+                else:
+                    out = run(parties.keys, xs.shares)
             np.asarray(out)
             dt = time.time() - t0
             qps = args.queries / dt
@@ -589,9 +704,12 @@ def main():
                   f"{args.queries} queries in {dt:.2f}s = {qps:.2f} q/s "
                   f"({ips:.1f} img/s)")
             stats.update({"img_per_s": ips, "query_per_s": qps})
+            measured_online = dt
     except IntegrityError as e:
         # deviation detected: abort with diagnostics, never a wrong answer
+        # — but still flush the trace/metrics so the abort is inspectable
         print(f"[serve_secure] ABORT: {e}", file=sys.stderr)
+        emit_obs(args, tracer, reg, led, predicted=pred, model=model)
         raise SystemExit(3)
 
     # modeled network wall-clock: total (online + preprocessing) next to
@@ -610,6 +728,8 @@ def main():
         "wan_ms_total": led.time(comm.WAN, online_only=False) * 1e3,
         "lan_ms_online": led.time(comm.LAN, online_only=True) * 1e3,
         "wan_ms_online": led.time(comm.WAN, online_only=True) * 1e3})
+    emit_obs(args, tracer, reg, led, predicted=pred, model=model,
+             online_s=measured_online, queries=args.queries)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(stats, f, indent=2)

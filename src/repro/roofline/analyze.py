@@ -427,6 +427,43 @@ def model_flops(cfg, shape_name: str) -> float:
     return 2.0 * n_active * tokens
 
 
+def span_totals_from_trace(trace: dict) -> dict:
+    """Aggregate a Chrome trace-event export (core/telemetry.py, DESIGN.md
+    §17) into per-category / per-span duration totals, for joining measured
+    phase time against the roofline bounds above.
+
+    Only complete ``"ph": "X"`` events carry durations.  The tracer fans a
+    ``lane="parties"`` span out to one event per party tid (SPMD lockstep:
+    the parties run the same program, so one measurement stands for all
+    three) — those copies share (name, cat, ts, dur) and are collapsed to
+    ONE logical span here so totals match wall time instead of triple-
+    counting.  Returns::
+
+        {"by_cat":  {cat:  {"us": total, "count": n}},
+         "by_span": {(cat, name): {"us": total, "count": n}},
+         "total_us": sum over by_cat}
+    """
+    by_cat: dict[str, dict] = {}
+    by_span: dict[tuple, dict] = {}
+    seen: set = set()
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") != "X":
+            continue
+        key = (ev.get("cat", ""), ev["name"], ev["ts"], ev["dur"])
+        if key in seen:   # party-lane fanout copy
+            continue
+        seen.add(key)
+        cat, dur = ev.get("cat", ""), float(ev["dur"])
+        c = by_cat.setdefault(cat, {"us": 0.0, "count": 0})
+        c["us"] += dur
+        c["count"] += 1
+        s = by_span.setdefault((cat, ev["name"]), {"us": 0.0, "count": 0})
+        s["us"] += dur
+        s["count"] += 1
+    return {"by_cat": by_cat, "by_span": by_span,
+            "total_us": sum(v["us"] for v in by_cat.values())}
+
+
 def roofline_terms(cfg, shape_name: str, cost: dict | None,
                    colls: dict, n_chips: int) -> dict:
     hlo_flops = float(cost.get("flops", -1.0)) if cost else -1.0
